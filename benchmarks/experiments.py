@@ -1,0 +1,110 @@
+"""Full faithful-repro experiment: Table 3 / Fig. 5 / Fig. 6.
+
+Runs the 5 algorithms x 2 datasets x seeds for `rounds` communication rounds
+on the synthetic CREMA-D / IEMOCAP stand-ins and saves per-round curves to
+benchmarks/results/repro/<dataset>__<algo>__s<seed>.json.
+
+  PYTHONPATH=src python -m benchmarks.experiments --rounds 100 --seeds 3
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "repro")
+
+ALGOS = ["random", "round_robin", "selection", "dropout", "jcsba"]
+DATASETS = ["crema_d", "iemocap"]
+# Fig. 4 trade-off: V=1 for CREMA-D, V=0.1 for IEMOCAP (§VI-A)
+V_CHOICE = {"crema_d": 1.0, "iemocap": 0.1}
+# The paper's regime has D_k ≈ 744 samples/client so e_cmp+e_com ≳ E_add and
+# the long-term energy constraint C5 binds.  Our synthetic shards are ~64
+# samples; E_add is scaled by the same factor so the Lyapunov queues bind
+# identically (Table-2 default stays in WirelessParams).
+E_ADD = 0.002
+
+
+def run_one(dataset: str, algo: str, seed: int, rounds: int,
+            n_samples: int, force: bool = False) -> dict:
+    os.makedirs(RESULTS, exist_ok=True)
+    path = os.path.join(RESULTS, f"{dataset}__{algo}__s{seed}.json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("rounds", 0) >= rounds:
+            return rec
+    from repro.fl.runtime import MFLExperiment
+    from repro.wireless.params import WirelessParams
+    exp = MFLExperiment(dataset=dataset, scheduler=algo, seed=seed,
+                        n_samples=n_samples, V=V_CHOICE[dataset],
+                        eval_every=2, params=WirelessParams(E_add=E_ADD))
+    exp.run(rounds)
+    curves = {"round": [], "multimodal": [], "loss": [], "energy": []}
+    mods = exp.all_mods
+    for m in mods:
+        curves[m] = []
+    for r in exp.history:
+        if not r.metrics:
+            continue
+        curves["round"].append(r.round)
+        curves["multimodal"].append(r.metrics["multimodal"])
+        curves["loss"].append(r.metrics["loss"])
+        curves["energy"].append(r.energy_total)
+        for m in mods:
+            curves[m].append(r.metrics[m])
+    rec = {"dataset": dataset, "algo": algo, "seed": seed, "rounds": rounds,
+           "curves": curves, "final": exp.final_metrics(),
+           "modalities": mods}
+    with open(path, "w") as f:
+        json.dump(rec, f)
+    print(f"[exp] {dataset}/{algo}/s{seed}: "
+          f"mm={rec['final'].get('multimodal', 0):.4f} "
+          f"E={rec['final'].get('energy_total', 0):.3f}J", flush=True)
+    return rec
+
+
+def aggregate_table3(rounds_min: int = 1):
+    """Mean final accuracies per (dataset, algo) over seeds — Table 3."""
+    out = {}
+    if not os.path.isdir(RESULTS):
+        return out
+    for f in os.listdir(RESULTS):
+        if not f.endswith(".json") or "__V" in f:
+            continue
+        with open(os.path.join(RESULTS, f)) as fh:
+            rec = json.load(fh)
+        key = (rec["dataset"], rec["algo"])
+        out.setdefault(key, []).append(rec)
+    table = {}
+    for (ds, algo), recs in out.items():
+        finals = {}
+        for k in ["multimodal"] + recs[0]["modalities"] + ["energy_total"]:
+            vals = [r["final"].get(k) for r in recs if k in r["final"]]
+            if vals:
+                finals[k] = float(np.mean(vals))
+        table[f"{ds}/{algo}"] = finals
+    return table
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=100)
+    ap.add_argument("--seeds", type=int, default=3)
+    ap.add_argument("--n-samples", type=int, default=800)
+    ap.add_argument("--datasets", nargs="*", default=DATASETS)
+    ap.add_argument("--algos", nargs="*", default=ALGOS)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    for ds in args.datasets:
+        for algo in args.algos:
+            for seed in range(args.seeds):
+                run_one(ds, algo, seed, args.rounds, args.n_samples,
+                        args.force)
+    print(json.dumps(aggregate_table3(), indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""§Perf hillclimb driver: run override variants of the three chosen pairs
+and print the roofline terms per iteration.
+
+  PYTHONPATH=src python -m benchmarks.hillclimb
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+PAIRS = [
+    # (arch, shape, list of override-dicts in hillclimb order)
+    ("qwen2-72b", "train_4k", [
+        {"loss_chunk": 512},
+        {"loss_chunk": 512, "remat": 1},
+        {"loss_chunk": 512, "attn_chunk": 512},
+    ]),
+    ("mamba2-370m", "prefill_32k", [
+        {"residual": "seq_model"},
+        {"tp_off": 1},
+        {"residual": "seq_model", "attn_chunk": 512},
+    ]),
+    ("llava-next-34b", "train_4k", [
+        {"loss_chunk": 512},
+        {"loss_chunk": 512, "remat": 1},
+    ]),
+]
+
+
+def terms(rec):
+    from benchmarks.roofline import roofline_row
+    row = roofline_row(rec)
+    if row is None:
+        return rec.get("status"), rec.get("error", "")[:160]
+    return (f"compute={row['compute_s']:.4f}s memory={row['memory_s']:.4f}s "
+            f"collective={row['collective_s']:.4f}s dom={row['dominant']}")
+
+
+def main():
+    from repro.launch.dryrun import run_one
+    for arch, shape, variants in PAIRS:
+        base = run_one(arch, shape, False)
+        print(f"== {arch} x {shape} BASELINE: {terms(base)}")
+        for ov in variants:
+            rec = run_one(arch, shape, False, overrides=ov)
+            print(f"   {ov}: {terms(rec)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,108 @@
+"""Roofline analysis (deliverable g): three terms per (arch x shape x mesh).
+
+Hardware constants (TPU v5e target):
+    peak   = 197 TFLOP/s bf16 per chip
+    HBM bw = 819 GB/s per chip
+    ICI    = ~50 GB/s per link (per chip, one direction)
+
+Terms (single-pod table; dry-run JSONs are the source):
+    compute_s    = FLOPs_global / (chips * peak)
+    memory_s     = HLO_bytes_global / (chips * HBM_bw)
+    collective_s = collective_operand_bytes_global / (chips * ICI_bw)
+
+Methodology notes (also in EXPERIMENTS.md):
+  * XLA's cost_analysis on a scanned layer stack counts the while-loop body
+    ONCE.  We therefore report BOTH the raw HLO numbers and corrected values
+    where the dominant per-layer quantities are scaled by n_blocks:
+        flops_corr = hlo_flops + (n_blocks-1)/n_blocks * share_in_loop ≈
+    We use the conservative closed form: flops_corr = hlo_flops_body_scaled =
+    (hlo_flops - f_out) * n_blocks + f_out is not separable from the text, so
+    instead: compute term uses analytic MODEL_FLOPS (exact by construction)
+    and the HLO/MODEL ratio is the remat/redundancy diagnostic on the
+    *unscaled* module.
+  * cost_analysis numbers are per-device (post-SPMD partitioning), so
+    global = per_device * chips.
+  * collective bytes already include the n_blocks multiplier for loop bodies
+    (see launch/hlo_analysis.py).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s / chip
+ICI_BW = 50e9                # B/s / link
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+
+def load_records(mesh: str = "16x16") -> List[dict]:
+    recs = []
+    if not os.path.isdir(DRYRUN_DIR):
+        return recs
+    for f in sorted(os.listdir(DRYRUN_DIR)):
+        if not f.endswith(f"__{mesh}.json"):
+            continue
+        with open(os.path.join(DRYRUN_DIR, f)) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def roofline_row(rec: dict) -> Optional[dict]:
+    if rec.get("status") != "ok":
+        return None
+    chips = rec["n_devices"]
+    model_fl = rec["model_flops"]
+    hlo_fl_dev = rec.get("hlo_flops", 0.0)
+    hlo_by_dev = rec.get("hlo_bytes", 0.0)
+    coll = rec.get("collectives", {}).get("total_operand_bytes", 0)
+
+    compute_s = model_fl / (chips * PEAK_FLOPS)
+    memory_s = hlo_by_dev / HBM_BW              # per-device bytes already
+    collective_s = coll / ICI_BW                # per-device program bytes
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+    util = model_fl / (chips * hlo_fl_dev) if hlo_fl_dev > 0 else float("nan")
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        **{k: round(v, 6) for k, v in terms.items()},
+        "dominant": dominant.replace("_s", ""),
+        "model_flops": model_fl,
+        "hlo_flops_per_dev": hlo_fl_dev,
+        "model_over_hlo": round(model_fl / chips / hlo_fl_dev, 3)
+        if hlo_fl_dev else None,
+        "bytes_per_dev_temp": rec.get("temp_size_in_bytes"),
+        "args_bytes_per_dev": rec.get("argument_size_in_bytes"),
+        "optimizer": rec.get("optimizer"),
+        "collective_by_kind": rec.get("collectives", {}).get("bytes_by_kind"),
+    }
+
+
+def table(mesh: str = "16x16") -> List[dict]:
+    rows = []
+    for rec in load_records(mesh):
+        row = roofline_row(rec)
+        if row:
+            rows.append(row)
+    return rows
+
+
+def print_table(mesh: str = "16x16"):
+    rows = table(mesh)
+    hdr = (f"{'arch':26s} {'shape':12s} {'compute_s':>11s} {'memory_s':>11s} "
+           f"{'collect_s':>11s} {'dominant':>10s} {'MODEL/HLO':>9s}")
+    print(hdr)
+    for r in rows:
+        print(f"{r['arch']:26s} {r['shape']:12s} {r['compute_s']:11.5f} "
+              f"{r['memory_s']:11.5f} {r['collective_s']:11.5f} "
+              f"{r['dominant']:>10s} "
+              f"{(r['model_over_hlo'] or float('nan')):9.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    print_table(sys.argv[1] if len(sys.argv) > 1 else "16x16")

@@ -1,0 +1,208 @@
+"""Benchmark harness — one benchmark per paper table/figure + system benches.
+
+Prints ``name,us_per_call,derived`` CSV rows (one per benchmark).
+
+  PYTHONPATH=src python -m benchmarks.run            # quick mode
+  PYTHONPATH=src python -m benchmarks.run --full     # full repro runs
+
+Benchmarks:
+  table3_*            — final multimodal/unimodal accuracy per algorithm
+                        (paper Table 3; reads benchmarks/results/repro if the
+                        full experiment ran, else runs a short version)
+  fig4_V_*            — energy/accuracy trade-off vs V (paper Fig. 4)
+  solver_runtime      — JCSBA per-round solve time (paper §VI: 0.008 s)
+  bound_descent       — Theorem-2 bound vs measured loss descent
+  kernel_*            — Pallas kernel oracles (interpret) + XLA-path timing
+  roofline_rows       — #(arch x shape) rows with all three terms present
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+ROWS = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def _time(fn, n=3, warmup=1):
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+# ---------------------------------------------------------------------------
+def bench_table3(quick: bool):
+    from benchmarks.experiments import aggregate_table3, run_one
+    table = aggregate_table3()
+    if not table:
+        for ds in (["crema_d"] if quick else ["crema_d", "iemocap"]):
+            for algo in ["random", "jcsba"]:
+                run_one(ds, algo, 0, rounds=20 if quick else 100,
+                        n_samples=400 if quick else 800)
+        table = aggregate_table3()
+    for key, vals in sorted(table.items()):
+        mods = [k for k in vals if k not in ("multimodal", "energy_total")]
+        derived = (f"mm={vals.get('multimodal', 0):.4f};"
+                   + ";".join(f"{m}={vals[m]:.4f}" for m in sorted(mods))
+                   + f";E={vals.get('energy_total', 0):.3f}J")
+        emit(f"table3_{key.replace('/', '_')}", 0.0, derived)
+
+
+def bench_fig4(quick: bool):
+    from repro.fl.runtime import MFLExperiment
+    Vs = [0.01, 1.0] if quick else [0.0001, 0.01, 0.1, 1.0, 10.0]
+    rounds = 12 if quick else 60
+    path = os.path.join(os.path.dirname(__file__), "results", "fig4.json")
+    if os.path.exists(path):
+        data = json.load(open(path))
+    else:
+        data = {}
+        for V in Vs:
+            exp = MFLExperiment(dataset="crema_d", scheduler="jcsba",
+                                n_samples=400, seed=0, V=V, eval_every=4)
+            exp.run(rounds)
+            f = exp.final_metrics()
+            data[str(V)] = {"multimodal": f.get("multimodal"),
+                            "energy": f.get("energy_total")}
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        json.dump(data, open(path, "w"))
+    for V, d in sorted(data.items(), key=lambda kv: float(kv[0])):
+        emit(f"fig4_V={V}", 0.0,
+             f"mm={d['multimodal']:.4f};E={d['energy']:.4f}J")
+
+
+def bench_solver_runtime(quick: bool):
+    from repro.core.aggregation import unified_weights
+    from repro.core.convergence import BoundState
+    from repro.wireless import cost as wcost
+    from repro.wireless.channel import Channel
+    from repro.wireless.params import MODALITY_PROFILES, WirelessParams
+    from repro.wireless.schedulers import ScheduleContext, make_scheduler
+    P = WirelessParams()
+    rng = np.random.default_rng(0)
+    mods = [("audio", "image"), ("audio",), ("image",)] * 3 + \
+        [("audio", "image")]
+    sizes = [80] * 10
+    cc = wcost.client_costs(sizes, mods, MODALITY_PROFILES["crema_d"], P)
+    ch = Channel(P, rng)
+    w = unified_weights(sizes, mods, ["audio", "image"])
+    bound = BoundState(10, ["audio", "image"], mods, w, sizes)
+    sched = make_scheduler("jcsba", rng)
+    h = ch.draw()
+
+    def solve():
+        ctx = ScheduleContext(h=h, Q=rng.uniform(0, 0.01, 10), cost=cc,
+                              params=P, bound=bound, round_idx=0,
+                              model_dist=np.zeros(10),
+                              client_modalities=mods)
+        sched.schedule(ctx)
+
+    us = _time(solve, n=3 if quick else 10)
+    emit("solver_runtime", us,
+         f"per_round={us / 1e6:.4f}s;paper=0.008s;tau_max=0.01s")
+
+
+def bench_bound(quick: bool):
+    """Theorem 2: measured per-round descent statistics under JCSBA."""
+    from repro.fl.runtime import MFLExperiment
+    exp = MFLExperiment(dataset="crema_d", scheduler="jcsba", n_samples=400,
+                        seed=0, eval_every=1)
+    exp.run(30 if quick else 80)
+    losses = [r.metrics["loss"] for r in exp.history if r.metrics]
+    descents = np.diff(losses)
+    frac_descent = float((descents <= 0).mean())
+    emit("bound_descent", 0.0,
+         f"frac_rounds_descending={frac_descent:.2f};"
+         f"total_drop={losses[0] - np.mean(losses[-3:]):.4f}")
+
+
+def bench_kernels(quick: bool):
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.fusion_loss.ref import fusion_loss_ref
+    from repro.models.layers import chunked_attention
+    from repro.models.mamba2 import ssd_chunked
+    rng = np.random.default_rng(0)
+
+    M, T, V = 2, 512, 32768
+    logits = jnp.asarray(rng.normal(size=(M, T, V)), jnp.bfloat16)
+    labels = jnp.asarray(rng.integers(0, V, T), jnp.int32)
+    avail = jnp.ones((M, T), jnp.float32)
+    f = jax.jit(fusion_loss_ref)
+    us = _time(lambda: jax.block_until_ready(f(logits, labels, avail)))
+    emit("kernel_fusion_loss_xla_ref", us, f"M={M};T={T};V={V}")
+
+    B, S, H, K, hd = 1, 1024, 8, 4, 64
+    q = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(B, S, K, hd)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(B, S, K, hd)), jnp.bfloat16)
+    f2 = jax.jit(lambda q, k, v: chunked_attention(q, k, v, window=None,
+                                                   chunk=256))
+    us = _time(lambda: jax.block_until_ready(f2(q, k, v)))
+    emit("kernel_flash_attention_xla_ref", us, f"S={S};H={H}")
+
+    Bz, S2, nh, hp, N = 1, 2048, 8, 64, 64
+    x = jnp.asarray(rng.normal(size=(Bz, S2, nh, hp)), jnp.float32)
+    dt = jnp.asarray(np.abs(rng.normal(size=(Bz, S2, nh))) * 0.1 + 0.01,
+                     jnp.float32)
+    A = jnp.asarray(-np.abs(rng.normal(size=nh)) - 0.1, jnp.float32)
+    Bm = jnp.asarray(rng.normal(size=(Bz, S2, N)), jnp.float32)
+    Cm = jnp.asarray(rng.normal(size=(Bz, S2, N)), jnp.float32)
+    f3 = jax.jit(lambda *a: ssd_chunked(*a, chunk=256))
+    us = _time(lambda: jax.block_until_ready(f3(x, dt, A, Bm, Cm)))
+    emit("kernel_ssd_scan_xla_ref", us, f"S={S2};nh={nh}")
+
+
+def bench_roofline(quick: bool):
+    from benchmarks.roofline import table
+    rows = table("16x16")
+    emit("roofline_rows_16x16", 0.0, f"n={len(rows)}")
+    rows2 = table("2x16x16")
+    if rows2:
+        emit("roofline_rows_2x16x16", 0.0, f"n={len(rows2)}")
+    by_dom = {}
+    for r in rows:
+        by_dom[r["dominant"]] = by_dom.get(r["dominant"], 0) + 1
+    emit("roofline_dominant_hist", 0.0,
+         ";".join(f"{k}={v}" for k, v in sorted(by_dom.items())))
+
+
+# ---------------------------------------------------------------------------
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None)
+    args, _ = ap.parse_known_args()
+    quick = not args.full
+    benches = {
+        "table3": bench_table3,
+        "fig4": bench_fig4,
+        "solver_runtime": bench_solver_runtime,
+        "bound": bench_bound,
+        "kernels": bench_kernels,
+        "roofline": bench_roofline,
+    }
+    print("name,us_per_call,derived")
+    for name, fn in benches.items():
+        if args.only and name != args.only:
+            continue
+        try:
+            fn(quick)
+        except Exception as e:  # keep the harness running
+            emit(f"{name}_ERROR", 0.0, f"{type(e).__name__}:{e}")
+
+
+if __name__ == "__main__":
+    main()

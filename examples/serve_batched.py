@@ -1,0 +1,14 @@
+"""Batched serving example: prefill + greedy decode of a reduced arch
+through the same serve_step the multi-pod dry-run lowers for decode_32k.
+
+  PYTHONPATH=src python examples/serve_batched.py --arch qwen3-0.6b
+  PYTHONPATH=src python examples/serve_batched.py --arch mamba2-370m
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    if "--reduced" not in sys.argv:
+        sys.argv.append("--reduced")
+    main()

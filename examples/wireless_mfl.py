@@ -1,0 +1,50 @@
+"""End-to-end driver (deliverable b): the paper's experiment — wireless MFL
+training for a few hundred communication rounds, JCSBA vs. a baseline, on the
+synthetic CREMA-D stand-in.  Saves curves + a comparison summary.
+
+  PYTHONPATH=src python examples/wireless_mfl.py --rounds 120
+"""
+import argparse
+import json
+import os
+
+import numpy as np
+
+from repro.fl.runtime import MFLExperiment
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=120)
+    ap.add_argument("--dataset", default="crema_d")
+    ap.add_argument("--n-samples", type=int, default=800)
+    ap.add_argument("--baseline", default="random")
+    ap.add_argument("--out", default="examples/out_wireless_mfl.json")
+    args = ap.parse_args()
+
+    results = {}
+    for algo in [args.baseline, "jcsba"]:
+        print(f"=== {algo} ===")
+        exp = MFLExperiment(dataset=args.dataset, scheduler=algo,
+                            n_samples=args.n_samples, seed=0, eval_every=4)
+        exp.run(args.rounds, verbose=False)
+        fin = exp.final_metrics()
+        curves = [(r.round, r.metrics.get("multimodal"), r.energy_total)
+                  for r in exp.history if r.metrics]
+        results[algo] = {"final": fin, "curve": curves}
+        print(f"{algo}: multimodal={fin.get('multimodal', 0):.4f} "
+              f"energy={fin.get('energy_total', 0):.3f}J "
+              f"sched={fin.get('mean_sched_time_s', 0)*1e3:.1f}ms/round")
+
+    mm_gain = (results["jcsba"]["final"].get("multimodal", 0)
+               - results[args.baseline]["final"].get("multimodal", 0))
+    print(f"\nJCSBA multimodal gain over {args.baseline}: {mm_gain*100:+.2f}% "
+          f"(paper reports +4.06% over conventional algorithms)")
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=1)
+    print("saved ->", args.out)
+
+
+if __name__ == "__main__":
+    main()

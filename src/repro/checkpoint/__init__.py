@@ -1,0 +1,3 @@
+from .checkpoint import save_checkpoint, load_checkpoint, latest_checkpoint
+
+__all__ = ["save_checkpoint", "load_checkpoint", "latest_checkpoint"]

@@ -1,0 +1,88 @@
+"""Pytree checkpointing: npz blob + JSON manifest (no orbax dependency).
+
+Leaves are flattened by '/'-joined key path; the manifest records tree
+structure, dtypes and step metadata so restore round-trips exactly.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_path_str(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return f"#{p.idx}"
+    return str(p)
+
+
+def _set_path(tree: dict, key: str, value):
+    parts = key.split("/")
+    cur = tree
+    for part in parts[:-1]:
+        cur = cur.setdefault(part, {})
+    cur[parts[-1]] = value
+
+
+def save_checkpoint(path: str, tree: Any, step: int = 0,
+                    metadata: Optional[dict] = None) -> str:
+    os.makedirs(path, exist_ok=True)
+    flat = _flatten(tree)
+    fn = os.path.join(path, f"ckpt_{step:08d}")
+    np.savez(fn + ".npz", **flat)
+    manifest = {
+        "step": step,
+        "keys": sorted(flat.keys()),
+        "dtypes": {k: str(v.dtype) for k, v in flat.items()},
+        "shapes": {k: list(v.shape) for k, v in flat.items()},
+        "metadata": metadata or {},
+    }
+    with open(fn + ".json", "w") as f:
+        json.dump(manifest, f, indent=1)
+    return fn + ".npz"
+
+
+def load_checkpoint(path: str, step: Optional[int] = None
+                    ) -> Tuple[dict, dict]:
+    """Returns (tree-as-nested-dicts, manifest). Lists are restored as dicts
+    keyed '#i' — callers that saved dict-only pytrees round-trip exactly."""
+    if step is None:
+        fn = latest_checkpoint(path)
+        if fn is None:
+            raise FileNotFoundError(f"no checkpoint under {path}")
+    else:
+        fn = os.path.join(path, f"ckpt_{step:08d}.npz")
+    with open(fn[:-4] + ".json") as f:
+        manifest = json.load(f)
+    blob = np.load(fn)
+    tree: dict = {}
+    for k in manifest["keys"]:
+        _set_path(tree, k, blob[k])
+    return tree, manifest
+
+
+def latest_checkpoint(path: str) -> Optional[str]:
+    if not os.path.isdir(path):
+        return None
+    pat = re.compile(r"ckpt_(\d+)\.npz$")
+    best, best_step = None, -1
+    for f in os.listdir(path):
+        m = pat.match(f)
+        if m and int(m.group(1)) > best_step:
+            best_step = int(m.group(1))
+            best = os.path.join(path, f)
+    return best

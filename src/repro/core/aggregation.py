@@ -1,0 +1,111 @@
+"""Per-modality global aggregation — Eqs. (9)-(12) of the paper.
+
+The global multimodal model is the stack of per-modality submodels.  In round
+t only participating clients that *have* modality m contribute to submodel m;
+their weights are renormalised to the participated aggregation weight
+``w^t_{k,m} = D_k / sum_{i in K_m^t} D_i`` (Eq. 12).  If no participant has
+modality m, the submodel is unchanged.  With full participation this equals
+the unified weights ``w̄_{k,m}`` (Eq. 9-10), which makes the scheme unbiased —
+property tested in tests/test_aggregation.py.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def unified_weights(data_sizes: Sequence[int],
+                    modalities: Sequence[Sequence[str]],
+                    all_modalities: Sequence[str]) -> Dict[str, np.ndarray]:
+    """w̄_{k,m} over the full population K_m (Eq. 9)."""
+    D = np.asarray(data_sizes, np.float64)
+    out = {}
+    for m in all_modalities:
+        has = np.array([m in mods for mods in modalities])
+        w = np.where(has, D, 0.0)
+        tot = w.sum()
+        out[m] = w / tot if tot > 0 else w
+    return out
+
+
+def participated_weights(data_sizes: Sequence[int],
+                         modalities: Sequence[Sequence[str]],
+                         participants: Sequence[int],
+                         all_modalities: Sequence[str]) -> Dict[str, np.ndarray]:
+    """w^t_{k,m} over K_m^t (Eq. 12); zero row if K_m^t is empty."""
+    D = np.asarray(data_sizes, np.float64)
+    part = np.zeros(len(data_sizes), bool)
+    part[list(participants)] = True
+    out = {}
+    for m in all_modalities:
+        has = np.array([m in mods for mods in modalities]) & part
+        w = np.where(has, D, 0.0)
+        tot = w.sum()
+        out[m] = w / tot if tot > 0 else w
+    return out
+
+
+def weights_from_uploads(data_sizes: Sequence[int],
+                         client_params: Sequence[Mapping[str, object]],
+                         all_modalities: Sequence[str]) -> Dict[str, np.ndarray]:
+    """Participated weights computed from what was *actually uploaded* —
+    under modality dropout [28] a client's upload may miss a modality it
+    owns; renormalising over real contributors keeps Eq. 12 a convex
+    combination (tested in test_aggregation.py)."""
+    D = np.asarray(data_sizes, np.float64)
+    out = {}
+    for m in all_modalities:
+        has = np.array([cp is not None and m in cp for cp in client_params])
+        w = np.where(has, D, 0.0)
+        tot = w.sum()
+        out[m] = w / tot if tot > 0 else w
+    return out
+
+
+def aggregate(global_params: Mapping[str, object],
+              client_params: List[Mapping[str, object]],
+              weights: Mapping[str, np.ndarray]) -> Dict[str, object]:
+    """θ^t_{g,m} = Σ_k w^t_{k,m} θ^t_{k,m} (Eq. 12), per modality.
+
+    ``client_params[k]`` holds only the modalities client k trained; absent
+    clients/modalities simply get zero weight.  If Σ_k w_{k,m} == 0 the global
+    submodel m is returned unchanged.
+    """
+    new_global: Dict[str, object] = {}
+    for m, g_sub in global_params.items():
+        w = weights[m]
+        if w.sum() <= 0:
+            new_global[m] = g_sub
+            continue
+        acc = jax.tree.map(jnp.zeros_like, g_sub)
+        for k, cp in enumerate(client_params):
+            if cp is None or m not in cp or w[k] == 0:
+                continue
+            acc = jax.tree.map(lambda a, x: a + w[k] * x, acc, cp[m])
+        new_global[m] = acc
+    return new_global
+
+
+def aggregate_gradients(grads_by_client: List[Mapping[str, object]],
+                        weights: Mapping[str, np.ndarray]) -> Dict[str, object]:
+    """∇H(θ_{g,m}) = Σ_k w_{k,m} ∇H_k(θ_{g,m}) (Eq. 9) — used by the ζ/δ
+    trackers in ``convergence.py``."""
+    out: Dict[str, object] = {}
+    mods = set()
+    for g in grads_by_client:
+        if g:
+            mods.update(g.keys())
+    for m in mods:
+        w = weights[m]
+        acc = None
+        for k, g in enumerate(grads_by_client):
+            if g is None or m not in g or w[k] == 0:
+                continue
+            term = jax.tree.map(lambda x: w[k] * x, g[m])
+            acc = term if acc is None else jax.tree.map(jnp.add, acc, term)
+        if acc is not None:
+            out[m] = acc
+    return out

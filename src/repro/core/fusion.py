@@ -1,0 +1,81 @@
+"""Decision-level fusion + unimodal loss — Eqs. (1)-(4) of the paper.
+
+* The multimodal decision is the *average of unimodal logits over the client's
+  available modalities* (missing modalities contribute 0 and are excluded from
+  the mean) — Eq. (1) / Fig. 2.
+* The local objective adds, for each available modality, a weighted unimodal
+  cross-entropy v_m * CE(logits_m, y) — Eqs. (2)-(3).
+* Total local loss H_k = F_k + G_k — Eq. (4).  The unimodal terms reuse the
+  already-computed unimodal logits, so the extra cost is only the CE itself —
+  the "no additional computational overhead" property the paper emphasises.
+
+These functions are shared between the faithful paper models (logits [B, C])
+and the LM-scale architectures (logits [B, S, V]); everything broadcasts.
+"""
+from __future__ import annotations
+
+from typing import Dict, Mapping, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean cross-entropy, fp32. logits [..., C]; labels [...] int."""
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(logits.astype(jnp.float32),
+                               labels[..., None], axis=-1)[..., 0]
+    return (lse - gold).mean()
+
+
+def fuse_logits(modal_logits: Mapping[str, jax.Array],
+                avail: Optional[Mapping[str, jax.Array]] = None) -> jax.Array:
+    """Eq. (1) fusion: mean of available modalities' logits.
+
+    ``avail[m]`` is an optional 0/1 scalar (or [B]-vector) availability mask;
+    by default every modality present in the dict is available.  Logit tensors
+    may broadcast against each other (e.g. vision [B,1,V] + text [B,S,V]).
+    """
+    num, den = None, None
+    for m, lg in modal_logits.items():
+        a = jnp.asarray(1.0 if avail is None else avail[m], jnp.float32)
+        while a.ndim < lg.ndim:
+            a = a[..., None]
+        term = lg.astype(jnp.float32) * a
+        num = term if num is None else num + term
+        den = a if den is None else den + a
+    return num / jnp.maximum(den, 1e-9)
+
+
+def multimodal_loss(modal_logits: Mapping[str, jax.Array],
+                    labels: jax.Array,
+                    v_weights: Optional[Mapping[str, float]] = None,
+                    avail: Optional[Mapping[str, jax.Array]] = None):
+    """H_k = F_k + G_k (Eqs. 1-4).
+
+    Returns (total, metrics) where metrics holds F, each unimodal G_m, and the
+    fused logits for accuracy computation.
+    """
+    fused = fuse_logits(modal_logits, avail)
+    F = softmax_xent(fused, labels)
+    G = jnp.zeros((), jnp.float32)
+    metrics: Dict[str, jax.Array] = {"F": F}
+    for m, lg in modal_logits.items():
+        v = 1.0 if v_weights is None else float(v_weights.get(m, 1.0))
+        a = jnp.asarray(1.0 if avail is None else avail[m], jnp.float32)
+        if lg.ndim == labels.ndim + 1 and lg.shape[:-1] == labels.shape:
+            g = softmax_xent(lg, labels)
+        else:
+            # broadcast logits (e.g. vision head [B,1,V] vs labels [B,S])
+            g = softmax_xent(jnp.broadcast_to(
+                lg, labels.shape + lg.shape[-1:]), labels)
+        g = v * jnp.mean(a) * g
+        metrics[f"G_{m}"] = g
+        G = G + g
+    metrics["G"] = G
+    metrics["fused_logits"] = fused
+    return F + G, metrics
+
+
+def accuracy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    return (jnp.argmax(logits, axis=-1) == labels).mean()

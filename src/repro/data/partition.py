@@ -1,0 +1,91 @@
+"""Client partitioning with modality heterogeneity (§VI "Datasets").
+
+The paper quantifies modality heterogeneity by a missing-modality ratio ω:
+ω_m = 0.3 means 30% of clients lack modality m.  We split the dataset into K
+equal-ish client shards and remove each modality from a disjoint ⌊ωK⌋-sized
+client subset (disjoint so every client keeps at least one modality, matching
+Fig. 1 where client 1 lacks image but keeps audio).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from .synthetic import MultimodalDataset
+
+
+@dataclasses.dataclass
+class ClientData:
+    dataset: MultimodalDataset          # only this client's modalities
+    modalities: Tuple[str, ...]
+
+    @property
+    def size(self) -> int:
+        return len(self.dataset)
+
+
+def _dirichlet_shards(ds: MultimodalDataset, K: int, alpha: float,
+                      rng) -> List[np.ndarray]:
+    """Label-skewed shards: per-class proportions ~ Dirichlet(alpha).
+    Small alpha = strong non-IID (the data-heterogeneity regime of the
+    paper's companion line of work [15])."""
+    shards: List[list] = [[] for _ in range(K)]
+    for c in range(ds.n_classes):
+        idx_c = np.flatnonzero(ds.labels == c)
+        rng.shuffle(idx_c)
+        p = rng.dirichlet([alpha] * K)
+        cuts = (np.cumsum(p) * len(idx_c)).astype(int)[:-1]
+        for k, part in enumerate(np.split(idx_c, cuts)):
+            shards[k].extend(part.tolist())
+    # rebalance BEFORE materialising so donated samples move, not duplicate
+    for k in range(K):
+        if not shards[k]:                     # guarantee non-empty clients
+            donor = int(np.argmax([len(x) for x in shards]))
+            shards[k].append(shards[donor].pop())
+    return [np.asarray(s, int) for s in shards]
+
+
+def partition(ds: MultimodalDataset, K: int, omega: float,
+              seed: int = 0,
+              dirichlet_alpha: float = 0.0) -> List[ClientData]:
+    """``dirichlet_alpha > 0`` adds label skew on top of the modality
+    heterogeneity (0 = IID equal shards, the paper's §VI setting)."""
+    rng = np.random.default_rng(seed)
+    if dirichlet_alpha > 0:
+        shards = _dirichlet_shards(ds, K, dirichlet_alpha, rng)
+    else:
+        idx = rng.permutation(len(ds))
+        shards = np.array_split(idx, K)
+    all_mods = sorted(ds.features.keys())
+    n_missing = int(np.floor(omega * K))
+
+    # disjoint missing sets per modality
+    order = rng.permutation(K)
+    missing: Dict[str, set] = {}
+    c = 0
+    for m in all_mods:
+        missing[m] = set(order[c:c + n_missing])
+        c += n_missing
+        if c + n_missing > K:                       # wrap around if ω large
+            c = 0
+
+    clients = []
+    for k in range(K):
+        mods = tuple(m for m in all_mods if k not in missing[m])
+        assert mods, "client lost every modality — lower omega"
+        sub = ds.subset(shards[k])
+        sub = MultimodalDataset(
+            ds.name, {m: sub.features[m] for m in mods}, sub.labels,
+            ds.n_classes)
+        clients.append(ClientData(sub, mods))
+    return clients
+
+
+def train_test_split(ds: MultimodalDataset, test_frac: float = 0.2,
+                     seed: int = 0):
+    rng = np.random.default_rng(seed)
+    idx = rng.permutation(len(ds))
+    n_test = int(test_frac * len(ds))
+    return ds.subset(idx[n_test:]), ds.subset(idx[:n_test])

@@ -1,0 +1,111 @@
+"""FL client-side computation: the local update of Algorithm 1, lines 4-6.
+
+One epoch of batch gradient descent (BGD) on the local dataset per round, per
+§II-A.  The loss is H_k = F_k + G_k (Eq. 4) computed by ``core.fusion``; only
+the client's available modalities are updated (missing submodels are neither
+computed nor uploaded — Eq. 7 and the discussion below it).
+
+``PaperModelAdapter`` binds this to the paper's LSTM/CNN submodels; the same
+interface drives the pods-as-clients mode for LM-scale models
+(examples/federated_pods.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import fusion
+from ..data.partition import ClientData
+from ..models import paper_models as pm
+
+
+class PaperModelAdapter:
+    """Decision-fusion multimodal model made of the paper's submodels."""
+
+    # Default pre-set modal weights v_m (Eq. 3).  The LSTM submodels need a
+    # stronger unimodal-loss pull than the CNN to converge under the shared
+    # BGD step size η — this is exactly the role the paper assigns v_m
+    # ("a pre-set modal weight"); calibration in EXPERIMENTS.md §Repro.
+    DEFAULT_V = {"audio": 6.0, "text": 4.0, "image": 1.0}
+
+    def __init__(self, dataset_name: str, eta: float = 0.05,
+                 v_weights: Optional[Mapping[str, float]] = None,
+                 dropout: float = 0.1):
+        self.dataset_name = dataset_name
+        self.eta = eta
+        self.v_weights = dict(self.DEFAULT_V if v_weights is None
+                              else v_weights)
+        self.dropout = dropout
+
+    # ------------------------------------------------------------------
+    def init_global(self, key) -> Dict[str, dict]:
+        if self.dataset_name == "crema_d":
+            return pm.init_crema_model(key)
+        if self.dataset_name == "iemocap":
+            return pm.init_iemocap_model(key)
+        raise ValueError(self.dataset_name)
+
+    # ------------------------------------------------------------------
+    @functools.lru_cache(maxsize=32)
+    def _update_fn(self, mods: Tuple[str, ...]):
+        v_weights = {m: self.v_weights.get(m, 1.0) for m in mods}
+
+        @jax.jit
+        def step(params, feats, labels, rng):
+            def loss(p):
+                logits = pm.modal_logits(p, feats, dropout_rng=rng)
+                total, met = fusion.multimodal_loss(logits, labels, v_weights)
+                return total, met["F"]
+
+            (total, F), grads = jax.value_and_grad(loss, has_aux=True)(params)
+            new = jax.tree.map(lambda p, g: p - self.eta * g, params, grads)
+            return new, grads, total, F
+
+        return step
+
+    def local_update(self, global_params: Mapping[str, dict],
+                     client: ClientData, rng: jax.Array,
+                     dropout_modality: Optional[str] = None):
+        """Returns (updated_subset, grads_subset, loss). Only modalities the
+        client trains appear in the outputs."""
+        mods = tuple(m for m in client.modalities if m != dropout_modality)
+        if not mods:
+            mods = client.modalities
+        params = {m: global_params[m] for m in mods}
+        feats = {m: jnp.asarray(client.dataset.features[m]) for m in mods}
+        labels = jnp.asarray(client.dataset.labels)
+        new, grads, total, _ = self._update_fn(mods)(params, feats, labels, rng)
+        return new, grads, float(total)
+
+    # ------------------------------------------------------------------
+    @functools.lru_cache(maxsize=8)
+    def _eval_fn(self, mods: Tuple[str, ...]):
+        @jax.jit
+        def ev(params, feats, labels):
+            logits = pm.modal_logits(params, feats)
+            fused = fusion.fuse_logits(logits)
+            out = {"multimodal": fusion.accuracy(fused, labels),
+                   "loss": fusion.softmax_xent(fused, labels)}
+            for m in mods:
+                out[m] = fusion.accuracy(logits[m], labels)
+            return out
+
+        return ev
+
+    def evaluate(self, params: Mapping[str, dict], test) -> Dict[str, float]:
+        mods = tuple(sorted(test.features.keys()))
+        feats = {m: jnp.asarray(test.features[m]) for m in mods}
+        labels = jnp.asarray(test.labels)
+        out = self._eval_fn(mods)({m: params[m] for m in mods}, feats, labels)
+        return {k: float(v) for k, v in out.items()}
+
+    def __hash__(self):   # lru_cache on methods needs a hashable self
+        return hash((self.dataset_name, self.eta, self.dropout,
+                     tuple(sorted(self.v_weights.items()))))
+
+    def __eq__(self, other):
+        return self is other

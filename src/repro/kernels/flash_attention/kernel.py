@@ -1,0 +1,119 @@
+"""Pallas TPU flash attention (forward): causal / sliding-window, GQA.
+
+Online-softmax accumulation in VMEM scratch; the S x S score matrix is never
+materialised in HBM.  Block sizes default to MXU-aligned (128) tiles.
+
+Grid: (B, H, Sq/Tq, Sk/Tk) with the key axis innermost; the KV BlockSpec
+index map folds GQA (kv head = q head // (H/K)) so no KV replication happens
+in HBM.  Fully-masked tiles are skipped with ``pl.when`` — on TPU this turns
+the causal/windowed sweep into the expected ~half/banded work.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s, *,
+            scale: float, block_q: int, block_k: int,
+            causal: bool, window: Optional[int]):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    q0 = iq * block_q
+    k0 = ik * block_k
+    # tile-level skip decision (static per grid point is impossible — index is
+    # dynamic — so use pl.when on a scalar predicate)
+    relevant = jnp.bool_(True)
+    if causal:
+        relevant &= k0 <= q0 + block_q - 1
+    if window is not None:
+        relevant &= (k0 + block_k - 1) > (q0 - window)
+
+    @pl.when(relevant)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)                 # [Tq, hd]
+        k = k_ref[0, 0].astype(jnp.float32)                 # [Tk, hd]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        qpos = q0 + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        kpos = k0 + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = jnp.ones((block_q, block_k), bool)
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_s[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_s[...] = l_s[...] * alpha + p.sum(axis=-1)
+        acc_s[...] = acc_s[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_s[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_s[...] /
+                       jnp.maximum(l_s[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "block_q", "block_k", "interpret"))
+def flash_attention_pallas(q, k, v, *, causal: bool = True,
+                           window: Optional[int] = None,
+                           block_q: int = 128, block_k: int = 128,
+                           interpret: bool = False):
+    """q: [B, H, S, hd]; k/v: [B, K, S, hd] -> [B, H, S, hd]."""
+    B, H, S, hd = q.shape
+    K = k.shape[1]
+    R = H // K
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    assert S % block_q == 0 and S % block_k == 0
+    grid = (B, H, S // block_q, S // block_k)
+    scale = 1.0 / math.sqrt(hd)
+
+    kern = functools.partial(_kernel, scale=scale, block_q=block_q,
+                             block_k=block_k, causal=causal, window=window)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd),
+                         lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, iq, ik: (b, h // R, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, iq, ik: (b, h // R, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd),
+                               lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

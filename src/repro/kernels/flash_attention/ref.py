@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the flash-attention kernel (causal / sliding window,
+GQA)."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True,
+                  window: Optional[int] = None) -> jax.Array:
+    """q: [B, H, S, hd]; k/v: [B, K, S, hd] -> [B, H, S, hd]."""
+    B, H, S, hd = q.shape
+    K = k.shape[1]
+    R = H // K
+    qg = q.reshape(B, K, R, S, hd)
+    s = jnp.einsum("bkrqh,bksh->bkrqs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkrqs,bksh->bkrqh", p.astype(v.dtype), v)
+    return o.reshape(B, H, S, hd).astype(q.dtype)

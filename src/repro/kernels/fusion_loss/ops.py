@@ -1,0 +1,55 @@
+"""jit'd public wrapper around the fusion-loss kernel.
+
+``fused_multimodal_loss`` reproduces ``core.fusion.multimodal_loss`` totals
+(F + Σ v_m·G_m) from the one-pass kernel outputs; on CPU it transparently
+falls back to interpret mode (the TPU kernel is the deploy target).
+"""
+from __future__ import annotations
+
+from typing import Mapping, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import fusion_loss_pallas
+from .ref import fusion_loss_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def fusion_loss(logits, labels, avail=None, *, block_t: int = 128,
+                block_v: int = 2048, interpret: Optional[bool] = None):
+    """logits [M,T,V]; labels [T]; avail [M,T] (default all-available)."""
+    M, T, V = logits.shape
+    if avail is None:
+        avail = jnp.ones((M, T), jnp.float32)
+    if interpret is None:
+        interpret = not _on_tpu()
+    return fusion_loss_pallas(logits, labels, avail, block_t=block_t,
+                              block_v=block_v, interpret=interpret)
+
+
+def fused_multimodal_loss(modal_logits: Mapping[str, jax.Array],
+                          labels: jax.Array,
+                          v_weights: Optional[Mapping[str, float]] = None,
+                          **kw):
+    """Dict-of-[B,S,V] front-end matching core.fusion.multimodal_loss.
+
+    Returns (total, {"F": ..., "G_<m>": ...}).
+    """
+    names = sorted(modal_logits.keys())
+    B, S, V = modal_logits[names[0]].shape
+    stack = jnp.stack([jnp.broadcast_to(modal_logits[m], (B, S, V))
+                       for m in names]).reshape(len(names), B * S, V)
+    fused_nll, modal_nll = fusion_loss(stack, labels.reshape(-1), **kw)
+    F = fused_nll.mean()
+    total = F
+    metrics = {"F": F}
+    for i, m in enumerate(names):
+        v = 1.0 if v_weights is None else float(v_weights.get(m, 1.0))
+        g = v * modal_nll[i].mean()
+        metrics[f"G_{m}"] = g
+        total = total + g
+    return total, metrics

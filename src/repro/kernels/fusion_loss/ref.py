@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the fused decision-fusion loss kernel.
+
+Inputs
+  logits: [M, T, V]   stacked per-modality logits (any float dtype)
+  labels: [T] int32
+  avail:  [M, T] float — 0/1 availability of modality m for token t
+Outputs
+  fused_nll: [T] f32   — CE of the availability-averaged logits (Eq. 1)
+  modal_nll: [M, T] f32 — per-modality CE (Eq. 3), zero where unavailable
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fusion_loss_ref(logits: jax.Array, labels: jax.Array, avail: jax.Array):
+    M, T, V = logits.shape
+    lg = logits.astype(jnp.float32)
+    a = avail.astype(jnp.float32)
+    denom = jnp.maximum(a.sum(0), 1e-9)                    # [T]
+    fused = jnp.einsum("mtv,mt->tv", lg, a) / denom[:, None]
+
+    def nll(x, y):
+        lse = jax.nn.logsumexp(x, axis=-1)
+        gold = jnp.take_along_axis(x, y[..., None], axis=-1)[..., 0]
+        return lse - gold
+
+    fused_nll = nll(fused, labels)
+    modal_nll = jax.vmap(lambda x: nll(x, labels))(lg) * a
+    return fused_nll, modal_nll

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the intra-chunk SSD kernel.
+
+Given one chunk (length Q) per (batch, chunk, head):
+  y_diag[t] = Σ_{s<=t} exp(cum_t − cum_s) (C_t·B_s) x_s
+  state     = Σ_s exp(cum_Q − cum_s) B_s ⊗ x_s
+where cum is the within-chunk cumulative sum of dt*A.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ssd_chunk_ref(x, cum, Bm, Cm):
+    """x: [B,nc,Q,nh,hp] (dt-weighted input), cum: [B,nc,Q,nh],
+    Bm/Cm: [B,nc,Q,N].  Returns (y_diag [B,nc,Q,nh,hp],
+    states [B,nc,nh,N,hp])."""
+    Q = x.shape[2]
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]         # [B,nc,Q,Q,nh]
+    tri = jnp.tril(jnp.ones((Q, Q), bool))[None, None, :, :, None]
+    L = jnp.exp(jnp.where(tri, diff, -jnp.inf))
+    scores = jnp.einsum("bctn,bcsn->bcts", Cm, Bm)
+    y_diag = jnp.einsum("bctsh,bcts,bcshp->bcthp", L, scores, x)
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)
+    states = jnp.einsum("bcsn,bcsh,bcshp->bchnp", Bm, decay_to_end, x)
+    return y_diag, states

@@ -1,0 +1,287 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("_REPRO_EXTRA_XLA", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+# ^ MUST precede any jax import: jax locks the device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh)
+combination on placeholder devices and extract the roofline raw terms.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all            # single-pod 16x16
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+
+Each run writes benchmarks/results/dryrun/<arch>__<shape>__<mesh>.json with
+memory_analysis / cost_analysis numbers and the parsed collective inventory.
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import ARCHS, get_config
+from ..models import analysis as man
+from . import hlo_analysis, sharding as shd, specs, steps
+from .mesh import data_axes, fsdp_axes, make_production_mesh, n_data_shards
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "benchmarks", "results", "dryrun")
+
+
+def _ns(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _strip_axis(pspecs, axis: str):
+    def strip(spec):
+        return P(*[
+            (None if ax == axis else
+             (tuple(a for a in ax if a != axis) or None)
+             if isinstance(ax, tuple) else ax)
+            for ax in spec])
+    return jax.tree.map(strip, pspecs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def lower_combo(arch: str, shape_name: str, *, multi_pod: bool = False,
+                attn_chunk: int = 1024, overrides: dict = None,
+                cfg_override=None):
+    """Returns (lowered, compiled, info dict). Raises on failure.
+
+    ``overrides`` — §Perf hillclimb levers:
+      attn_chunk:int, loss_chunk:int, remat:bool,
+      residual:"seq_model" (sequence-parallel residual stream),
+      tp_off:bool (replicate params over the model axis).
+    """
+    cfg = cfg_override or get_config(arch)
+    shape = specs.INPUT_SHAPES[shape_name]
+    ok, why = specs.supports(cfg, shape)
+    if not ok:
+        return None, None, {"skipped": True, "reason": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    fsdp = fsdp_axes(mesh)
+    n_groups = n_data_shards(mesh)
+    overrides = overrides or {}
+    attn_chunk = overrides.get("attn_chunk", attn_chunk)
+    bk = {}
+    if overrides.get("loss_chunk"):
+        bk["loss_chunk"] = int(overrides["loss_chunk"])
+    if overrides.get("remat"):
+        bk["remat"] = True
+    if overrides.get("residual") == "seq_model":
+        da = data_axes(mesh)
+        bk["residual_spec"] = P(da if shape.global_batch > 1 else None,
+                                "model", None)
+
+    pshape = steps.params_shape(cfg)
+    pspecs = shd.tree_pspecs(pshape, fsdp, mesh=mesh)
+    if overrides.get("tp_off"):
+        pspecs = _strip_axis(pspecs, "model")
+    info = dict(man.model_flops(cfg, pshape, shape))
+    info.update(arch=arch, shape=shape_name,
+                mesh="2x16x16" if multi_pod else "16x16",
+                n_devices=int(np.prod(list(mesh.shape.values()))))
+
+    with mesh:
+        if shape.kind == "train":
+            optimizer, opt_name = steps.make_optimizer(cfg, info["n_params"])
+            info["optimizer"] = opt_name
+            oshape = jax.eval_shape(optimizer.init, pshape)
+            ospecs = shd.sanitize_tree(
+                shd.opt_state_pspecs(oshape, pshape, fsdp), oshape, mesh)
+            if overrides.get("tp_off"):
+                ospecs = _strip_axis(ospecs, "model")
+            bshape = specs.batch_specs(cfg, shape)
+            bspecs = specs.batch_pspecs(cfg, shape, mesh)
+            fn = steps.make_train_step(cfg, optimizer, n_groups=n_groups,
+                                       attn_chunk=attn_chunk, **bk)
+            jfn = jax.jit(fn, in_shardings=(_ns(mesh, pspecs),
+                                            _ns(mesh, ospecs),
+                                            _ns(mesh, bspecs)),
+                          donate_argnums=(0, 1))
+            args = (pshape, oshape, bshape)
+        elif shape.kind == "prefill":
+            bshape = specs.batch_specs(cfg, shape)
+            bspecs = specs.batch_pspecs(cfg, shape, mesh)
+            fn = steps.make_prefill_step(cfg, n_groups=n_groups,
+                                         attn_chunk=attn_chunk, **bk)
+            jfn = jax.jit(fn, in_shardings=(_ns(mesh, pspecs),
+                                            _ns(mesh, bspecs)))
+            args = (pshape, bshape)
+        else:  # decode
+            cshape = specs.cache_specs(cfg, shape)
+            cspecs = specs.cache_pspecs(cshape, cfg, shape, mesh)
+            bshape = specs.batch_specs(cfg, shape)
+            bspecs = specs.batch_pspecs(cfg, shape, mesh)
+            fn = steps.make_serve_step(cfg)
+            jfn = jax.jit(fn, in_shardings=(_ns(mesh, pspecs),
+                                            _ns(mesh, cspecs),
+                                            _ns(mesh, bspecs["token"]),
+                                            _ns(mesh, bspecs["index"])),
+                          donate_argnums=(1,))
+            args = (pshape, cshape, bshape["token"], bshape["index"])
+
+        t0 = time.time()
+        lowered = jfn.lower(*args)
+        info["lower_s"] = round(time.time() - t0, 2)
+        t0 = time.time()
+        compiled = lowered.compile()
+        info["compile_s"] = round(time.time() - t0, 2)
+    return lowered, compiled, info
+
+
+def analyse(lowered, compiled, info, cfg) -> dict:
+    out = dict(info)
+    try:
+        ma = compiled.memory_analysis()
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "generated_code_size_in_bytes",
+                     "alias_size_in_bytes"):
+            v = getattr(ma, attr, None)
+            if v is not None:
+                out[attr] = int(v)
+    except Exception as e:  # CPU backend may not implement everything
+        out["memory_analysis_error"] = str(e)
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        out["hlo_flops"] = float(ca.get("flops", -1.0))
+        out["hlo_bytes"] = float(ca.get("bytes accessed", -1.0))
+        out["hlo_transcendentals"] = float(ca.get("transcendentals", -1.0))
+    except Exception as e:
+        out["cost_analysis_error"] = str(e)
+    try:
+        txt = compiled.as_text()
+        mult = cfg.n_blocks if cfg.arch_type != "audio" else cfg.n_layers
+        ops = hlo_analysis.parse_collectives(txt, loop_multiplier=mult)
+        out["collectives"] = hlo_analysis.summarize(ops)
+        out["hlo_text_bytes"] = len(txt)
+    except Exception as e:
+        out["collectives_error"] = str(e)
+    return out
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, force: bool = False,
+            overrides: dict = None) -> dict:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    mesh_tag = "2x16x16" if multi_pod else "16x16"
+    tag = f"{arch}__{shape_name}__{mesh_tag}"
+    if overrides:
+        tag += "__" + "_".join(f"{k}{v}" for k, v in sorted(overrides.items()))
+    path = os.path.join(RESULTS_DIR, tag + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+    cfg = get_config(arch)
+    try:
+        lowered, compiled, info = lower_combo(arch, shape_name,
+                                              multi_pod=multi_pod,
+                                              overrides=overrides)
+        if info.get("skipped"):
+            rec = {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
+                   "status": "skipped", "reason": info["reason"]}
+        else:
+            rec = analyse(lowered, compiled, info, cfg)
+            rec["status"] = "ok"
+    except Exception as e:
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
+               "status": "error", "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-2000:]}
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    status = rec["status"]
+    print(f"[dryrun] {tag}: {status} "
+          f"(compile={rec.get('compile_s', '-')}s)", flush=True)
+    return rec
+
+
+def calibrate(arch: str, shape_name: str, multi_pod: bool = False) -> dict:
+    """Depth calibration: re-lower the SAME dims at 1 and 2 super-blocks.
+
+    XLA's cost_analysis counts a while-loop body once; per-step cost is
+    affine in depth, cost(n) = a + b*n, so two shallow compiles identify
+    (a, b) and corrected(N) = c1 + (N-1)*(c2-c1).  The corrected values are
+    patched into the combo's dry-run JSON (hlo_*_corrected)."""
+    import dataclasses
+    cfg = get_config(arch)
+    bp = len(cfg.block_pattern())
+    mesh_tag = "2x16x16" if multi_pod else "16x16"
+    path = os.path.join(RESULTS_DIR, f"{arch}__{shape_name}__{mesh_tag}.json")
+    if not os.path.exists(path):
+        return {}
+    with open(path) as f:
+        rec = json.load(f)
+    if rec.get("status") != "ok" or "calib" in rec:
+        return rec
+    vals = {}
+    for n in (1, 2):
+        kw = dict(n_layers=bp * n)
+        if cfg.encoder_layers:
+            kw["encoder_layers"] = n
+        shallow = dataclasses.replace(cfg, **kw)
+        try:
+            _, compiled, info = lower_combo(arch, shape_name,
+                                            multi_pod=multi_pod,
+                                            cfg_override=shallow)
+            ca = compiled.cost_analysis()
+            if isinstance(ca, (list, tuple)):
+                ca = ca[0]
+            vals[n] = {"flops": float(ca.get("flops", 0.0)),
+                       "bytes": float(ca.get("bytes accessed", 0.0))}
+        except Exception as e:
+            rec["calib_error"] = f"{type(e).__name__}: {e}"
+            break
+    if len(vals) == 2:
+        N = cfg.n_blocks if cfg.arch_type != "audio" else cfg.n_layers
+        for key in ("flops", "bytes"):
+            b = vals[2][key] - vals[1][key]
+            rec[f"hlo_{key}_corrected"] = vals[1][key] + (N - 1) * b
+        rec["calib"] = {"c1": vals[1], "c2": vals[2], "n_units": N}
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(f"[calib] {arch}__{shape_name}__{mesh_tag}: "
+          f"flops x{rec.get('hlo_flops_corrected', 0) / max(rec.get('hlo_flops', 1), 1):.1f}",
+          flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--calibrate", action="store_true")
+    ap.add_argument("--override", action="append", default=[],
+                    help="k=v hillclimb override (attn_chunk/loss_chunk/"
+                         "remat/residual/tp_off)")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.override:
+        k, v = kv.split("=", 1)
+        overrides[k] = (int(v) if v.isdigit() else
+                        v == "true" if v in ("true", "false") else v)
+
+    archs = [args.arch] if args.arch else list(ARCHS)
+    shapes = [args.shape] if args.shape else list(specs.INPUT_SHAPES)
+    for a in archs:
+        for s in shapes:
+            if args.calibrate:
+                calibrate(a, s, args.multi_pod)
+            else:
+                run_one(a, s, args.multi_pod, args.force,
+                        overrides=overrides or None)
+
+
+if __name__ == "__main__":
+    main()

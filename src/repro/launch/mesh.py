@@ -1,0 +1,40 @@
+"""Production mesh construction.
+
+Single pod:  (data=16, model=16)            — 256 chips (TPU v5e pod)
+Multi-pod:   (pod=2, data=16, model=16)     — 512 chips
+
+Defined as functions so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS before any jax import; tests and smoke
+runs must keep seeing 1 CPU device).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_data: int = 1, n_model: int = 1):
+    """Tiny mesh for CPU integration tests (requires matching device count)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+def data_axes(mesh) -> tuple:
+    """Axes the global batch is sharded over."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def fsdp_axes(mesh) -> tuple:
+    """Axes FSDP-style parameter sharding uses (ZeRO over all data replicas;
+    on the multi-pod mesh this includes the pod axis so kimi-k2-scale
+    optimizer state fits — DESIGN.md §6)."""
+    return data_axes(mesh)
+
+
+def n_data_shards(mesh) -> int:
+    import numpy as np
+    return int(np.prod([mesh.shape[a] for a in data_axes(mesh)]))

@@ -1,0 +1,141 @@
+"""Input / cache ShapeDtypeStruct specs for every (arch x input-shape) pair.
+
+No device memory is ever allocated here — everything is ``ShapeDtypeStruct``
+stand-ins consumed by ``jit(...).lower()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..models.config import ModelConfig
+from ..models import transformer as T
+from ..models import encdec
+from .mesh import data_axes
+
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                      # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES: Dict[str, InputShape] = {
+    "train_4k":    InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k":  InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k":   InputShape("long_500k", 524288, 1, "decode"),
+}
+
+# whisper's encoder source length (30 s of 10 ms frames, post-conv: 1500)
+WHISPER_SRC_LEN = 1536
+# llava anyres tiling: 4 tiles + base image, 576 patches each
+VLM_N_PATCHES = 2880
+
+# archs with full quadratic attention and no sub-quadratic variant skip
+# long_500k (DESIGN.md §5); gemma3 (sliding window), jamba + mamba2
+# (SSM state) run it.
+LONG_CONTEXT_OK = {"gemma3-12b", "jamba-v0.1-52b", "mamba2-370m"}
+
+
+def supports(cfg: ModelConfig, shape: InputShape) -> Tuple[bool, str]:
+    if shape.name == "long_500k" and cfg.name not in LONG_CONTEXT_OK:
+        return False, ("full quadratic attention; no sub-quadratic variant "
+                       "implemented for this family")
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+def batch_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    """ShapeDtypeStructs of the step inputs (excluding params/opt/cache)."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        batch = {"tokens": SDS((B, S), jnp.int32)}
+        if shape.kind == "train":
+            batch["labels"] = SDS((B, S), jnp.int32)
+        if cfg.arch_type == "vlm":
+            batch["patches"] = SDS((B, VLM_N_PATCHES, cfg.frontend_dims[0]),
+                                   jnp.bfloat16)
+        if cfg.arch_type == "audio":
+            batch["src_embeds"] = SDS((B, WHISPER_SRC_LEN, cfg.d_model),
+                                      jnp.bfloat16)
+        return batch
+    # decode: one new token against a seq_len cache
+    return {"token": SDS((B, 1), jnp.int32),
+            "index": SDS((), jnp.int32)}
+
+
+def batch_pspecs(cfg: ModelConfig, shape: InputShape, mesh) -> dict:
+    da = data_axes(mesh)
+    bspec = da if shape.global_batch > 1 else None
+    if shape.kind in ("train", "prefill"):
+        out = {"tokens": P(bspec, None)}
+        if shape.kind == "train":
+            out["labels"] = P(bspec, None)
+        if cfg.arch_type == "vlm":
+            out["patches"] = P(bspec, None, None)
+        if cfg.arch_type == "audio":
+            out["src_embeds"] = P(bspec, None, None)
+        return out
+    return {"token": P(bspec, None), "index": P()}
+
+
+# ---------------------------------------------------------------------------
+def cache_specs(cfg: ModelConfig, shape: InputShape):
+    """ShapeDtypeStructs for the decode cache (eval_shape of init_cache)."""
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.arch_type == "audio":
+        return jax.eval_shape(
+            lambda: encdec.init_dec_cache(cfg, B, S, WHISPER_SRC_LEN))
+    return jax.eval_shape(lambda: T.init_cache(cfg, B, S))
+
+
+def cache_pspecs(cache_shape, cfg: ModelConfig, shape: InputShape, mesh):
+    """KV caches: batch over data when B>1; kv-heads over model when they
+    divide it, otherwise the sequence dim takes the model axis (all assigned
+    archs have GQA kv=8 < 16, so seq-sharded caches are the norm — the decode
+    softmax then reduces over a sharded axis, which XLA turns into the
+    expected all-reduce, visible in the roofline's collective term).
+    long_500k (B=1) additionally spreads seq over the data axes."""
+    da = data_axes(mesh)
+    batch_first = shape.global_batch > 1
+    n_model = mesh.shape["model"]
+    kv_div = cfg.n_kv_heads > 0 and cfg.n_kv_heads % n_model == 0
+
+    def spec_for(path: str, leaf) -> P:
+        nd = leaf.ndim
+        if path.endswith(("/k", "/v")) or "cross_" in path:
+            # [n_blocks(?), B, S, K, hd]
+            if kv_div:
+                s = (None, da if batch_first else None,
+                     None if batch_first else da, "model", None)
+            elif batch_first:
+                s = (None, da, "model", None, None)
+            else:
+                s = (None, None, tuple(da) + ("model",), None, None)
+            return P(*s[-nd:]) if nd <= 5 else P(*((None,) * (nd - 5) + s))
+        if path.endswith("/ssm"):
+            # [n_blocks, B, nh, N, hp]
+            s = (None, da if batch_first else None, "model", None, None)
+            return P(*s[-nd:])
+        if "conv_x" in path:
+            s = (None, da if batch_first else None, None, "model")
+            return P(*s[-nd:])
+        if "conv_" in path:
+            s = (None, da if batch_first else None, None, None)
+            return P(*s[-nd:])
+        return P(*((None,) * nd))
+
+    from .sharding import _path_str, sanitize_tree
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shape)
+    specs = [spec_for(_path_str(p), leaf) for p, leaf in flat]
+    return sanitize_tree(jax.tree_util.tree_unflatten(treedef, specs),
+                         cache_shape, mesh)

@@ -1,0 +1,155 @@
+"""Per-architecture step factories: init / train_step / prefill / serve_step.
+
+These are the functions the dry-run lowers and the drivers jit.  Optimizer
+selection is memory-aware: Adafactor for ≥30B-parameter architectures
+(factored second moments — DESIGN.md §5 kimi-k2 note), AdamW otherwise.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import fusion
+from ..models import encdec, multimodal, transformer as T
+from ..models.config import ModelConfig
+from ..optim import adafactor, adamw, apply_updates
+from .specs import WHISPER_SRC_LEN
+
+ADAFACTOR_THRESHOLD = 30e9
+
+
+def init_fn(cfg: ModelConfig) -> Callable:
+    if cfg.arch_type == "audio":
+        return lambda key: encdec.init_params(key, cfg)
+    if cfg.arch_type == "vlm":
+        return lambda key: multimodal.init_vlm_params(key, cfg)
+    return lambda key: T.init_params(key, cfg)
+
+
+def params_shape(cfg: ModelConfig):
+    return jax.eval_shape(init_fn(cfg), jax.random.key(0))
+
+
+def param_count(shapes) -> int:
+    return int(sum(np.prod(l.shape) for l in jax.tree.leaves(shapes)))
+
+
+def make_optimizer(cfg: ModelConfig, n_params: Optional[int] = None,
+                   lr: float = 1e-4):
+    if n_params is None:
+        n_params = param_count(params_shape(cfg))
+    if n_params >= ADAFACTOR_THRESHOLD:
+        return adafactor(lr), "adafactor"
+    return adamw(lr), "adamw"
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+def make_loss_fn(cfg: ModelConfig, *, n_groups: int = 1,
+                 attn_chunk: int = 1024, aux_weight: float = 0.01, **bk):
+    """Extra keyword levers (threaded to the backbone — §Perf hillclimbs):
+    ``loss_chunk``: fused chunked unembed+CE; ``residual_spec``: sharding
+    constraint on the residual stream; ``remat``: checkpoint super-blocks."""
+    if cfg.arch_type == "vlm":
+        loss_chunk = bk.pop("loss_chunk", None)
+        if loss_chunk:
+            def loss(params, batch):
+                total, aux = multimodal.vlm_loss_chunked(
+                    params, batch, cfg, loss_chunk, n_groups=n_groups,
+                    attn_chunk=attn_chunk, **bk)
+                return total + aux_weight * aux
+            return loss
+
+        def loss(params, batch):
+            modal, aux = multimodal.vlm_modal_logits(
+                params, batch, cfg, n_groups=n_groups, attn_chunk=attn_chunk,
+                **bk)
+            total, _ = fusion.multimodal_loss(modal, batch["labels"])
+            return total + aux_weight * aux
+        return loss
+    if cfg.arch_type == "audio":
+        bk.pop("loss_chunk", None)
+
+        def loss(params, batch):
+            enc = encdec.encode(params, batch["src_embeds"], cfg,
+                                attn_chunk=attn_chunk)
+            dec_logits = encdec.decode_fwd(params, batch["tokens"], enc, cfg,
+                                           attn_chunk=attn_chunk)
+            audio_logits = encdec.audio_head_logits(params, enc)[:, None, :]
+            total, _ = fusion.multimodal_loss(
+                {"text": dec_logits, "audio": audio_logits}, batch["labels"])
+            return total
+        return loss
+
+    def loss(params, batch):
+        return T.loss_fn(params, batch, cfg, n_groups=n_groups,
+                         attn_chunk=attn_chunk, aux_weight=aux_weight, **bk)
+    return loss
+
+
+def make_train_step(cfg: ModelConfig, optimizer, *, n_groups: int = 1,
+                    attn_chunk: int = 1024, **bk):
+    loss_fn = make_loss_fn(cfg, n_groups=n_groups, attn_chunk=attn_chunk,
+                           **bk)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        return params, opt_state, loss
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+def make_prefill_step(cfg: ModelConfig, *, n_groups: int = 1,
+                      attn_chunk: int = 1024, **bk):
+    bk.pop("loss_chunk", None)
+    if cfg.arch_type == "vlm":
+        def prefill(params, batch):
+            fused, _, _ = multimodal.vlm_fused_forward(
+                params, batch, cfg, n_groups=n_groups, attn_chunk=attn_chunk,
+                **bk)
+            return fused[:, -1, :]
+        return prefill
+    if cfg.arch_type == "audio":
+        def prefill(params, batch):
+            enc = encdec.encode(params, batch["src_embeds"], cfg,
+                                attn_chunk=attn_chunk)
+            logits = encdec.decode_fwd(params, batch["tokens"], enc, cfg,
+                                       attn_chunk=attn_chunk)
+            return logits[:, -1, :]
+        return prefill
+
+    def prefill(params, batch):
+        return T.prefill(params, batch["tokens"], cfg, n_groups=n_groups,
+                         attn_chunk=attn_chunk, **bk)
+    return prefill
+
+
+def make_serve_step(cfg: ModelConfig):
+    """One greedy decode step: (params, cache, token, index) ->
+    (next_token [B,1], new_cache).
+
+    VLM note: the vision decision head contributes a per-request constant
+    logit bias during decode; it is added at the sampling layer by
+    ``launch.serve`` (precomputed once at prefill), so the per-step function
+    is the backbone decode for both dense and vlm archs.
+    """
+    if cfg.arch_type == "audio":
+        def serve_step(params, cache, token, index):
+            logits, cache = encdec.decode_step(params, cache, token, index, cfg)
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+        return serve_step
+
+    def serve_step(params, cache, token, index):
+        logits, cache = T.decode_step(params, cache, token, index, cfg)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+    return serve_step

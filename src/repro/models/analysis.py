@@ -1,0 +1,54 @@
+"""Analytic FLOPs / parameter accounting for the roofline report.
+
+MODEL_FLOPS follows the assignment definition: 6·N·D for dense training
+(N = params, D = tokens), 6·N_active·D for MoE; decode steps are forward-only:
+2·N_active per generated token (plus attention's O(S) KV reads, which are
+memory- not FLOP-dominated).
+"""
+from __future__ import annotations
+
+import re
+from typing import Tuple
+
+import numpy as np
+import jax
+
+_EXPERT_RE = re.compile(r"ffn/(wg|wu|wd)$")
+
+
+def _path_str(path) -> str:
+    return "/".join(str(p.key) if hasattr(p, "key") else f"#{getattr(p, 'idx', p)}"
+                    for p in path)
+
+
+def param_counts(params_shape, cfg) -> Tuple[int, int]:
+    """(N_total, N_active). Expert tensors [E, ., .] count k/E of their
+    params as active (top-k routing); everything else is always active."""
+    total = 0
+    active = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params_shape)[0]:
+        n = int(np.prod(leaf.shape))
+        total += n
+        p = _path_str(path)
+        if _EXPERT_RE.search(p) and leaf.ndim == 3 and cfg.n_experts > 0:
+            active += n * cfg.top_k // cfg.n_experts
+        else:
+            active += n
+    return total, active
+
+
+def model_flops(cfg, params_shape, shape) -> dict:
+    """Assignment-standard MODEL_FLOPS for one step of the given input shape."""
+    n_total, n_active = param_counts(params_shape, cfg)
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        tokens = B * S
+        flops = 6 * n_active * tokens
+    elif shape.kind == "prefill":
+        tokens = B * S
+        flops = 2 * n_active * tokens
+    else:  # decode: one token per sequence
+        tokens = B
+        flops = 2 * n_active * tokens
+    return {"n_params": int(n_total), "n_active": int(n_active),
+            "tokens": int(tokens), "model_flops": int(flops)}

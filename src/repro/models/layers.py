@@ -1,0 +1,257 @@
+"""Transformer building blocks: RMSNorm, RoPE, GQA attention, SwiGLU MLP.
+
+Attention notes
+---------------
+* Training/prefill uses a *query-chunked, online-softmax* ("flash-style")
+  attention written in pure jnp + ``lax.scan`` so the S x S score matrix is never
+  materialised — this is the XLA path used by the multi-pod dry-run.  The Pallas
+  TPU kernel in ``repro.kernels.flash_attention`` implements the same math with
+  explicit VMEM BlockSpecs and is validated against ``ref.py`` in interpret mode.
+* Sliding-window layers (gemma3 locals) slice only the ``window + chunk`` keys a
+  query chunk can see, so local attention is genuinely sub-quadratic.
+* Decode attends one query token against a KV cache (ring buffer for windowed
+  layers).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+NEG_INF = -1e30
+
+
+# ----------------------------------------------------------------------------
+# basics
+# ----------------------------------------------------------------------------
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return ((x32 * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def init_dense(key, d_in: int, d_out: int, dtype, bias: bool = False):
+    w = jax.random.normal(key, (d_in, d_out), dtype=jnp.float32) / math.sqrt(d_in)
+    p = {"w": w.astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype=dtype)
+    return p
+
+
+def dense(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+# ----------------------------------------------------------------------------
+# RoPE
+# ----------------------------------------------------------------------------
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [B, S, N, hd]; positions: [B, S] (int32)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq  # [B, S, half]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------------
+# attention parameters
+# ----------------------------------------------------------------------------
+def init_attention(key, cfg: ModelConfig):
+    hd, H, K, D = cfg.hd, cfg.n_heads, cfg.n_kv_heads, cfg.d_model
+    ks = jax.random.split(key, 4)
+    dt = cfg.param_dtype
+    p = {
+        "wq": init_dense(ks[0], D, H * hd, dt, bias=cfg.qkv_bias),
+        "wk": init_dense(ks[1], D, K * hd, dt, bias=cfg.qkv_bias),
+        "wv": init_dense(ks[2], D, K * hd, dt, bias=cfg.qkv_bias),
+        "wo": init_dense(ks[3], H * hd, D, dt),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), dtype=dt)
+        p["k_norm"] = jnp.zeros((hd,), dtype=dt)
+    return p
+
+
+def _project_qkv(p, x, cfg: ModelConfig, positions):
+    B, S, _ = x.shape
+    hd, H, K = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    q = dense(p["wq"], x).reshape(B, S, H, hd)
+    k = dense(p["wk"], x).reshape(B, S, K, hd)
+    v = dense(p["wv"], x).reshape(B, S, K, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+# ----------------------------------------------------------------------------
+# flash-style chunked attention (pure jnp; never materialises S x S)
+# ----------------------------------------------------------------------------
+def _attn_chunk(q, k, v, mask, scale):
+    """q: [B,G,R,Cq,hd]  k/v: [B,G,Sk,hd]  mask: [Cq,Sk] -> out [B,G,R,Cq,hd].
+
+    G = kv head groups, R = q heads per kv head.  fp32 softmax.
+    """
+    s = jnp.einsum("bgrqh,bgkh->bgrqk", q, k).astype(jnp.float32) * scale
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - m)
+    z = jnp.sum(e, axis=-1, keepdims=True)
+    o = jnp.einsum("bgrqk,bgkh->bgrqh", (e / jnp.maximum(z, 1e-30)).astype(v.dtype), v)
+    return o
+
+
+def chunked_attention(q, k, v, *, window: Optional[int], chunk: int = 1024,
+                      q_offset: int = 0, causal: bool = True) -> jax.Array:
+    """Causal (optionally sliding-window) attention.
+
+    q: [B, Sq, H, hd], k/v: [B, Sk, K, hd].  Returns [B, Sq, H, hd].
+    ``q_offset`` is the absolute position of q[0] relative to k[0]
+    (prefill: 0; chunked decode not used here).
+    """
+    B, Sq, H, hd = q.shape
+    Sk, K = k.shape[1], k.shape[2]
+    R = H // K
+    scale = 1.0 / math.sqrt(hd)
+    chunk = min(chunk, Sq)
+    while Sq % chunk != 0:          # self-adjust to a divisor of Sq
+        chunk //= 2
+    n_chunks = Sq // chunk
+
+    qg = q.reshape(B, Sq, K, R, hd).transpose(0, 2, 3, 1, 4)   # [B,K,R,Sq,hd]
+    kg = k.transpose(0, 2, 1, 3)                               # [B,K,Sk,hd]
+    vg = v.transpose(0, 2, 1, 3)
+
+    if window is None:
+        # full attention: causal -> each q chunk sees keys [0, t0 + chunk);
+        # bidirectional (encoder / cross-attn) -> all keys.
+        def body(t, _):
+            t0 = t * chunk
+            qc = jax.lax.dynamic_slice_in_dim(qg, t0, chunk, axis=3)
+            qpos = q_offset + t0 + jnp.arange(chunk)
+            kpos = jnp.arange(Sk)
+            if causal:
+                mask = kpos[None, :] <= qpos[:, None]
+            else:
+                mask = jnp.ones((chunk, Sk), bool)
+            o = _attn_chunk(qc, kg, vg, mask, scale)
+            return t + 1, o
+        _, outs = jax.lax.scan(body, 0, None, length=n_chunks)
+    else:
+        # sliding window: q chunk [t0, t0+chunk) sees keys [t0-window+1, t0+chunk)
+        w = window
+        pad = ((0, 0), (0, 0), (w, 0), (0, 0))
+        kp = jnp.pad(kg, pad)
+        vp = jnp.pad(vg, pad)
+        span = w + chunk
+
+        def body(t, _):
+            t0 = t * chunk
+            qc = jax.lax.dynamic_slice_in_dim(qg, t0, chunk, axis=3)
+            kc = jax.lax.dynamic_slice_in_dim(kp, t0, span, axis=2)
+            vc = jax.lax.dynamic_slice_in_dim(vp, t0, span, axis=2)
+            qpos = q_offset + t0 + jnp.arange(chunk)
+            kpos = q_offset + t0 - w + jnp.arange(span)
+            mask = (kpos[None, :] <= qpos[:, None]) & \
+                   (kpos[None, :] > qpos[:, None] - w) & (kpos[None, :] >= 0)
+            o = _attn_chunk(qc, kc, vc, mask, scale)
+            return t + 1, o
+        _, outs = jax.lax.scan(body, 0, None, length=n_chunks)
+
+    # outs: [n_chunks, B, K, R, chunk, hd] -> [B, Sq, H, hd]
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, Sq, H, hd)
+    return out
+
+
+def attention_fwd(p, x, cfg: ModelConfig, *, window: Optional[int],
+                  positions=None, chunk: int = 1024):
+    """Full training/prefill attention layer. x: [B,S,D] -> [B,S,D]."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    o = chunked_attention(q, k, v, window=window, chunk=min(chunk, S))
+    return dense(p["wo"], o.reshape(B, S, cfg.n_heads * cfg.hd))
+
+
+# ----------------------------------------------------------------------------
+# decode (single token vs KV cache)
+# ----------------------------------------------------------------------------
+def init_attn_cache(cfg: ModelConfig, batch: int, seq: int,
+                    window: Optional[int], dtype) -> dict:
+    size = seq if window is None else min(window, seq)
+    K, hd = cfg.n_kv_heads, cfg.hd
+    return {
+        "k": jnp.zeros((batch, size, K, hd), dtype=dtype),
+        "v": jnp.zeros((batch, size, K, hd), dtype=dtype),
+    }
+
+
+def attention_decode(p, x, cache: dict, index: jax.Array, cfg: ModelConfig,
+                     *, window: Optional[int]):
+    """x: [B,1,D]; index: scalar int32 = number of tokens already in cache.
+
+    Returns (y [B,1,D], new_cache).
+    """
+    B = x.shape[0]
+    hd, H, K = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    R = H // K
+    pos = jnp.broadcast_to(index[None, None].astype(jnp.int32), (B, 1))
+    q, k, v = _project_qkv(p, x, cfg, pos)          # q [B,1,H,hd]; k/v [B,1,K,hd]
+    size = cache["k"].shape[1]
+    slot = (index % size).astype(jnp.int32)
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+
+    kpos = jnp.arange(size)
+    if window is None:
+        valid = kpos <= index                        # positions written so far
+    else:
+        # ring buffer: entry at slot s holds absolute position p with p % size == s
+        # valid if within the last `window` tokens (incl. the new one)
+        abs_pos = kpos + ((index - kpos) // size) * size
+        abs_pos = jnp.where(abs_pos > index, abs_pos - size, abs_pos)
+        valid = (abs_pos >= 0) & (abs_pos >= index - size + 1) & (abs_pos <= index)
+    qh = q.reshape(B, 1, K, R, hd).transpose(0, 2, 3, 1, 4)       # [B,K,R,1,hd]
+    kh = ck.transpose(0, 2, 1, 3)                                 # [B,K,size,hd]
+    vh = cv.transpose(0, 2, 1, 3)
+    s = jnp.einsum("bgrqh,bgkh->bgrqk", qh, kh).astype(jnp.float32) / math.sqrt(hd)
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    w_ = jax.nn.softmax(s, axis=-1).astype(vh.dtype)
+    o = jnp.einsum("bgrqk,bgkh->bgrqh", w_, vh)
+    o = o.transpose(0, 3, 1, 2, 4).reshape(B, 1, H * hd)
+    y = dense(p["wo"], o)
+    return y, {"k": ck, "v": cv}
+
+
+# ----------------------------------------------------------------------------
+# MLP (SwiGLU)
+# ----------------------------------------------------------------------------
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None):
+    d_ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    dt = cfg.param_dtype
+    return {
+        "wg": init_dense(ks[0], cfg.d_model, d_ff, dt),
+        "wu": init_dense(ks[1], cfg.d_model, d_ff, dt),
+        "wd": init_dense(ks[2], d_ff, cfg.d_model, dt),
+    }
+
+
+def mlp(p, x):
+    return dense(p["wd"], jax.nn.silu(dense(p["wg"], x)) * dense(p["wu"], x))

@@ -1,0 +1,190 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) in JAX.
+
+Train/prefill uses the chunked SSD algorithm: intra-chunk attention-like matmul
+(MXU friendly) + an inter-chunk ``lax.scan`` over the recurrent state.  The
+intra-chunk contraction is the compute hot spot and has a Pallas TPU kernel in
+``repro.kernels.ssd_scan`` (validated vs. ``ref.py`` in interpret mode); the
+pure-jnp path here is the dry-run/XLA path.
+
+Sharding note (DESIGN.md §6): the canonical fused ``in_proj`` of the reference
+implementation concatenates z|x|B|C|dt in one output dim — slicing that dim is
+hostile to tensor-parallel sharding (misaligned shard boundaries force
+reshards).  We keep z/x/dt projections as separate arrays sharded over the
+``model`` axis (heads/d_inner are model-parallel) and replicate the tiny B/C
+projections (N=16..128).  The math is identical.
+
+Decode keeps a constant-size cache: depthwise-conv tails + SSM state
+[B, nh, N, hp] — this is what makes long_500k decoding O(1) per token.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+
+def init_mamba(key, cfg: ModelConfig):
+    D, di, N, nh = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_n_heads
+    dt = cfg.param_dtype
+    ks = jax.random.split(key, 7)
+
+    def proj(k, dout):
+        return (jax.random.normal(k, (D, dout), jnp.float32)
+                / math.sqrt(D)).astype(dt)
+
+    return {
+        "wz": proj(ks[0], di),
+        "wx": proj(ks[1], di),
+        "wB": proj(ks[2], N),
+        "wC": proj(ks[3], N),
+        "wdt": proj(ks[4], nh),
+        "conv_x": (jax.random.normal(ks[6], (cfg.ssm_conv, di), jnp.float32)
+                   * 0.1).astype(dt),
+        "conv_B": jnp.zeros((cfg.ssm_conv, N), dt) .at[-1].set(1.0),
+        "conv_C": jnp.zeros((cfg.ssm_conv, N), dt) .at[-1].set(1.0),
+        "conv_bx": jnp.zeros((di,), dt),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "A_log": jnp.log(jnp.arange(1, nh + 1, dtype=jnp.float32)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "norm": jnp.zeros((di,), dt),
+        "out_proj": (jax.random.normal(ks[5], (di, D), jnp.float32)
+                     / math.sqrt(di)).astype(dt),
+    }
+
+
+def _causal_conv(x, w, b=None):
+    """Depthwise causal conv, kernel K. x: [B,S,C], w: [K,C]."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(K))
+    if b is not None:
+        out = out + b
+    return jax.nn.silu(out)
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int):
+    """Chunked SSD.
+
+    x:  [B, S, nh, hp]   (conv'd + silu'd input)
+    dt: [B, S, nh]       (post-softplus step sizes, fp32)
+    A:  [nh]             (negative, fp32)
+    Bm: [B, S, N], Cm: [B, S, N]
+    Returns y: [B, S, nh, hp] (x.dtype).
+    """
+    Bsz, S, nh, hp = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+    xd = x.astype(jnp.float32) * dt[..., None]                    # dt-weighted
+    dtA = dt * A[None, None, :]                                   # [B,S,nh]
+
+    xc = xd.reshape(Bsz, nc, Q, nh, hp)
+    dAc = dtA.reshape(Bsz, nc, Q, nh)
+    Bc = Bm.astype(jnp.float32).reshape(Bsz, nc, Q, N)
+    Cc = Cm.astype(jnp.float32).reshape(Bsz, nc, Q, N)
+
+    # --- intra-chunk (diagonal blocks): attention-like, MXU-friendly ---
+    cum = jnp.cumsum(dAc, axis=2)                                 # [B,nc,Q,nh]
+    # decay matrix L[t,s] = exp(cum_t - cum_s), lower-triangular.
+    # Mask the EXPONENT (not the exp) — upper-triangle diffs are large
+    # positive, exp overflows to inf, and 0*inf poisons the backward pass.
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]          # [B,nc,Q,Q,nh]
+    tri = jnp.tril(jnp.ones((Q, Q), bool))[None, None, :, :, None]
+    Lmat = jnp.exp(jnp.where(tri, diff, -jnp.inf))
+    scores = jnp.einsum("bctn,bcsn->bcts", Cc, Bc)                # [B,nc,Q,Q]
+    y_diag = jnp.einsum("bctsh,bcts,bcshp->bcthp", Lmat, scores, xc)
+
+    # --- chunk summary states: S_c = Σ_s exp(cum_last − cum_s) B_s x_s^T ---
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)               # [B,nc,Q,nh]
+    states = jnp.einsum("bcsn,bcsh,bcshp->bchnp", Bc, decay_to_end, xc)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                       # [B,nc,nh]
+
+    # --- inter-chunk recurrence (lax.scan keeps memory flat) ---
+    def body(h, inp):
+        st, dec = inp                                             # [B,nh,N,hp], [B,nh]
+        h_before = h
+        h = h * dec[..., None, None] + st
+        return h, h_before
+
+    h0 = jnp.zeros((Bsz, nh, N, hp), jnp.float32)
+    _, h_prev = jax.lax.scan(
+        body, h0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)                      # [B,nc,nh,N,hp]
+
+    # --- inter-chunk contribution: y_off[t] = C_t · (exp(cum_t) * h_prev) ---
+    in_decay = jnp.exp(cum)                                       # [B,nc,Q,nh]
+    y_off = jnp.einsum("bctn,bcth,bchnp->bcthp", Cc, in_decay, h_prev)
+
+    y = (y_diag + y_off).reshape(Bsz, S, nh, hp)
+    return y.astype(x.dtype)
+
+
+def mamba_fwd(p, u, cfg: ModelConfig):
+    """u: [B, S, D] -> [B, S, D]."""
+    B, S, D = u.shape
+    nh, hp, N = cfg.ssm_n_heads, cfg.ssm_head_dim, cfg.ssm_state
+    z = u @ p["wz"]
+    x = _causal_conv(u @ p["wx"], p["conv_x"], p["conv_bx"])
+    Bm = _causal_conv(u @ p["wB"], p["conv_B"])
+    Cm = _causal_conv(u @ p["wC"], p["conv_C"])
+    dt = jax.nn.softplus((u @ p["wdt"]).astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xh = x.reshape(B, S, nh, hp)
+    y = ssd_chunked(xh, dt, A, Bm, Cm, cfg.ssm_chunk)
+    y = y + xh * p["D"][None, None, :, None].astype(x.dtype)
+    y = y.reshape(B, S, cfg.d_inner)
+    from .layers import rms_norm
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return y @ p["out_proj"]
+
+
+# ----------------------------------------------------------------------------
+# decode
+# ----------------------------------------------------------------------------
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    K = cfg.ssm_conv
+    return {
+        "conv_x": jnp.zeros((batch, K - 1, cfg.d_inner), dtype=dtype),
+        "conv_B": jnp.zeros((batch, K - 1, cfg.ssm_state), dtype=dtype),
+        "conv_C": jnp.zeros((batch, K - 1, cfg.ssm_state), dtype=dtype),
+        "ssm": jnp.zeros((batch, cfg.ssm_n_heads, cfg.ssm_state,
+                          cfg.ssm_head_dim), dtype=jnp.float32),
+    }
+
+
+def _conv_step(tail, new, w, b=None):
+    """tail: [B,K-1,C]; new: [B,C] -> (out [B,C], new_tail)."""
+    window = jnp.concatenate([tail, new[:, None, :].astype(tail.dtype)], axis=1)
+    out = jnp.einsum("bkc,kc->bc", window, w)
+    if b is not None:
+        out = out + b
+    return jax.nn.silu(out), window[:, 1:, :]
+
+
+def mamba_decode(p, u, cache: dict, cfg: ModelConfig):
+    """u: [B, 1, D] -> (y [B,1,D], new_cache)."""
+    B = u.shape[0]
+    nh, hp, N = cfg.ssm_n_heads, cfg.ssm_head_dim, cfg.ssm_state
+    u0 = u[:, 0]
+    z = u0 @ p["wz"]
+    x, tx = _conv_step(cache["conv_x"], u0 @ p["wx"], p["conv_x"], p["conv_bx"])
+    Bm, tB = _conv_step(cache["conv_B"], u0 @ p["wB"], p["conv_B"])
+    Cm, tC = _conv_step(cache["conv_C"], u0 @ p["wC"], p["conv_C"])
+    dt = jax.nn.softplus((u0 @ p["wdt"]).astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    dec = jnp.exp(dt * A[None, :])                                 # [B,nh]
+    xh = x.reshape(B, nh, hp).astype(jnp.float32)
+    h = cache["ssm"] * dec[..., None, None] + \
+        jnp.einsum("bn,bhp->bhnp", Bm.astype(jnp.float32), xh * dt[..., None])
+    y = jnp.einsum("bn,bhnp->bhp", Cm.astype(jnp.float32), h)
+    y = y + xh * p["D"][None, :, None]
+    y = y.reshape(B, cfg.d_inner).astype(u.dtype)
+    from .layers import rms_norm
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = (y @ p["out_proj"])[:, None, :]
+    return out, {"conv_x": tx, "conv_B": tB, "conv_C": tC, "ssm": h}

@@ -1,0 +1,106 @@
+"""Mixture-of-Experts layer with sort-based capacity dispatch.
+
+Design (TPU-native, cf. DESIGN.md §4):
+* Tokens are processed in ``n_groups`` groups (one group per data shard) so the
+  argsort / scatter stay shard-local; expert weights are sharded over the
+  ``model`` mesh axis, so the group->expert scatter is the all-to-all that shows
+  up in the roofline's collective term.
+* Dispatch: top-k routing, tokens sorted by expert id, capacity
+  ``C = ceil(k * T_group / E * capacity_factor)``; overflow tokens are dropped
+  (contribute 0) exactly as in Switch/GShard-style capacity routing.
+* Router runs in fp32; an auxiliary load-balance loss (Switch-style) is
+  returned for the training objective.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import init_dense
+
+
+def init_moe(key, cfg: ModelConfig):
+    E = cfg.n_experts
+    F = cfg.expert_d_ff or cfg.d_ff
+    D = cfg.d_model
+    dt = cfg.param_dtype
+    ks = jax.random.split(key, 5)
+    scale = 1.0 / math.sqrt(D)
+    p = {
+        "router": (jax.random.normal(ks[0], (D, E), jnp.float32) * scale).astype(jnp.float32),
+        "wg": (jax.random.normal(ks[1], (E, D, F), jnp.float32) * scale).astype(dt),
+        "wu": (jax.random.normal(ks[2], (E, D, F), jnp.float32) * scale).astype(dt),
+        "wd": (jax.random.normal(ks[3], (E, F, D), jnp.float32) / math.sqrt(F)).astype(dt),
+    }
+    if cfg.n_shared_experts:
+        Fs = F * cfg.n_shared_experts
+        kss = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "wg": init_dense(kss[0], D, Fs, dt),
+            "wu": init_dense(kss[1], D, Fs, dt),
+            "wd": init_dense(kss[2], Fs, D, dt),
+        }
+    return p
+
+
+def _dispatch_group(x, logits, k: int, capacity: int):
+    """x: [T, D]; logits: [T, E] fp32. Returns (y [T, D], aux fp32)."""
+    T, D = x.shape
+    E = logits.shape[-1]
+    probs = jax.nn.softmax(logits, axis=-1)                    # fp32
+    gates, idx = jax.lax.top_k(probs, k)                       # [T, k]
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = idx.reshape(-1)                                   # [T*k]
+    flat_g = gates.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(T), k)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sg = flat_e[order], flat_t[order], flat_g[order]
+
+    counts = jnp.zeros((E,), jnp.int32).at[flat_e].add(1)
+    starts = jnp.cumsum(counts) - counts                       # exclusive cumsum
+    pos = jnp.arange(T * k) - starts[se]                       # rank within expert
+    keep = pos < capacity
+    dest = jnp.where(keep, se * capacity + pos, E * capacity)  # drop row -> scratch
+
+    xe = jnp.zeros((E * capacity + 1, D), x.dtype).at[dest].add(x[st])
+    xe = xe[: E * capacity].reshape(E, capacity, D)
+    return (xe, se, st, sg, keep, dest, counts, probs)
+
+
+def moe_apply(p, x, cfg: ModelConfig, *, n_groups: int = 1):
+    """x: [B, S, D] -> (y [B, S, D], aux_loss scalar fp32)."""
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    T = B * S
+    assert T % n_groups == 0, (T, n_groups)
+    Tg = T // n_groups
+    capacity = max(int(math.ceil(k * Tg / E * cfg.capacity_factor)), 1)
+
+    xf = x.reshape(n_groups, Tg, D)
+    logits = (xf.astype(jnp.float32) @ p["router"][None]).astype(jnp.float32)
+
+    def per_group(xg, lg):
+        xe, se, st, sg, keep, dest, counts, probs = _dispatch_group(xg, lg, k, capacity)
+        h = jnp.einsum("ecd,edf->ecf", xe, p["wg"])
+        u = jnp.einsum("ecd,edf->ecf", xe, p["wu"])
+        y = jnp.einsum("ecf,efd->ecd", jax.nn.silu(h) * u, p["wd"])
+        yf = y.reshape(E * capacity, D)
+        contrib = yf[jnp.minimum(dest, E * capacity - 1)] * \
+            (sg * keep.astype(jnp.float32))[:, None].astype(y.dtype)
+        out = jnp.zeros((Tg, D), y.dtype).at[st].add(contrib)
+        # Switch-style load balance: E * sum_e f_e * P_e
+        frac = counts.astype(jnp.float32) / (Tg * k)
+        pmean = probs.mean(axis=0)
+        aux = E * jnp.sum(frac * pmean)
+        return out, aux
+
+    y, aux = jax.vmap(per_group)(xf, logits)
+    y = y.reshape(B, S, D)
+    if "shared" in p:
+        from .layers import mlp
+        y = y + mlp(p["shared"], x)
+    return y, aux.mean()

@@ -1,0 +1,117 @@
+"""Decision-level-fusion multimodal wrappers for the LM-scale architectures.
+
+The paper's architecture (Fig. 2) is M unimodal submodels whose *logits* are
+averaged (parameter-free fusion), with a per-modality unimodal CE added to the
+objective (Eqs. 1-4).  We realise exactly that structure at LM scale:
+
+* llava-next-34b (vlm): text submodel = the 60L backbone on text tokens;
+  vision submodel = a light head on pooled anyres patch embeddings (frontend
+  STUB per the carve-out) producing vocab logits broadcast over positions.
+  Fused logits = mean of available modalities' logits, as in Eq. (1).
+* whisper-base (audio): the enc-dec backbone gives (audio-conditioned) decoder
+  logits; the audio submodel head pools the encoder.  See ``encdec.py``.
+
+The actual fusion / unimodal-loss math lives in ``repro.core.fusion`` and is
+shared with the faithful paper models — this module only produces the
+per-modality logits.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from . import transformer as T
+
+
+def init_vlm_params(key, cfg: ModelConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = T.init_params(k1, cfg)
+    d_patch = cfg.frontend_dims[0] if cfg.frontend_dims else cfg.d_model
+    dt = cfg.param_dtype
+    p["vision"] = {
+        # projector: patch embedding -> d_model (anyres tiles pre-flattened)
+        "proj": (jax.random.normal(k2, (d_patch, cfg.d_model), jnp.float32)
+                 * 0.02).astype(dt),
+        # vision decision head: pooled patches -> vocab logits
+        "w1": (jax.random.normal(k3, (cfg.d_model, cfg.d_model), jnp.float32)
+               * 0.02).astype(dt),
+        "w2": jnp.zeros((cfg.d_model, cfg.vocab_size), dt),
+    }
+    return p
+
+
+def vlm_modal_logits(params, batch, cfg: ModelConfig, *, n_groups: int = 1,
+                     attn_chunk: int = 1024, **bk):
+    """batch: {"tokens": [B,S], "patches": [B,P,d_patch]}.
+
+    Returns ({"text": [B,S,V], "vision": [B,1,V]}, moe_aux).
+    The vision logits broadcast over sequence positions during fusion.
+    """
+    tokens = batch["tokens"]
+    patches = batch["patches"]
+    text_logits, aux = T.forward(params, tokens, cfg, n_groups=n_groups,
+                                 attn_chunk=attn_chunk, **bk)
+    pv = patches @ params["vision"]["proj"]                 # [B,P,D]
+    pooled = pv.mean(axis=1)                                # [B,D]
+    h = jax.nn.gelu(pooled @ params["vision"]["w1"])
+    vision_logits = (h @ params["vision"]["w2"])[:, None, :]  # [B,1,V]
+    return {"text": text_logits, "vision": vision_logits}, aux
+
+
+def vlm_fused_forward(params, batch, cfg: ModelConfig, **kw):
+    """Fused logits per Eq. (1): average of available modal logits."""
+    modal, aux = vlm_modal_logits(params, batch, cfg, **kw)
+    fused = 0.5 * (modal["text"] + modal["vision"])         # broadcast over S
+    return fused, modal, aux
+
+
+def vlm_loss_chunked(params, batch, cfg: ModelConfig, chunk: int, *,
+                     n_groups: int = 1, attn_chunk: int = 1024, **bk):
+    """Streaming decision-fusion loss: unembed + fused CE + both unimodal CEs
+    computed per sequence chunk — the [B,S,V] text logits and the fused
+    logits are never materialised (XLA analogue of the fusion_loss Pallas
+    kernel; §Perf hillclimb for the vlm train shape).
+
+    Returns (total_loss, moe_aux)."""
+    tokens, labels, patches = batch["tokens"], batch["labels"], batch["patches"]
+    x = T.embed_tokens(params, tokens, cfg)
+    h, aux = T.backbone(params, x, cfg, n_groups=n_groups,
+                        attn_chunk=attn_chunk, **bk)
+    pv = patches @ params["vision"]["proj"]
+    pooled = pv.mean(axis=1)
+    hv = jax.nn.gelu(pooled @ params["vision"]["w1"])
+    vision_logits = (hv @ params["vision"]["w2"]).astype(jnp.float32)  # [B,V]
+
+    B, S, D = h.shape
+    chunk = min(chunk, S)
+    while S % chunk != 0:
+        chunk //= 2
+    nc = S // chunk
+    hc = h.reshape(B, nc, chunk, D).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, nc, chunk).transpose(1, 0, 2)
+
+    # vision unimodal CE is position-independent: one term, exact
+    v_lse = jax.nn.logsumexp(vision_logits, axis=-1)                 # [B]
+
+    def body(carry, xs):
+        t_tot, f_tot = carry
+        hh, ll = xs
+        text = T.unembed(params, hh, cfg).astype(jnp.float32)        # [B,c,V]
+        t_lse = jax.nn.logsumexp(text, axis=-1)
+        gold_t = jnp.take_along_axis(text, ll[..., None], -1)[..., 0]
+        fused = 0.5 * (text + vision_logits[:, None, :])
+        f_lse = jax.nn.logsumexp(fused, axis=-1)
+        gold_f = jnp.take_along_axis(fused, ll[..., None], -1)[..., 0]
+        return (t_tot + (t_lse - gold_t).sum(),
+                f_tot + (f_lse - gold_f).sum()), None
+
+    (t_tot, f_tot), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (hc, lc))
+    n = B * S
+    # vision unimodal CE broadcast over positions: lse is per-B constant,
+    # the gold logit varies with the per-position label
+    G_vision = (v_lse[:, None]
+                - jnp.take_along_axis(vision_logits, labels, axis=-1)).mean()
+    return t_tot / n + f_tot / n + G_vision, aux

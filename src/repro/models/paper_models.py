@@ -1,0 +1,161 @@
+"""The paper's exact unimodal submodels (§VI "Models"), in JAX.
+
+* Audio submodel (CREMA-D & IEMOCAP): unidirectional 2-layer LSTM
+  (input 11, hidden=output=50), a 50-neuron hidden FC layer, and a C-neuron
+  output layer; dropout 0.1 between LSTM layers during training.
+* Text submodel (IEMOCAP): same with input 100, hidden 60, 10 outputs.
+* Image submodel (CREMA-D): CNN with 3 conv layers of 16 5x5 kernels
+  (3x5x5, 16x5x5, 16x5x5) each followed by 5x5 max-pooling with stride 3,
+  then FC hidden layers of 64 and 32 neurons and a 6-neuron output layer.
+
+Each submodel maps its modality's feature tensor to C-class logits — the
+decision-level fusion and the unimodal losses are applied by
+``repro.core.fusion`` exactly as in Eqs. (1)-(4).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# LSTM submodel
+# ---------------------------------------------------------------------------
+def _init_lstm_layer(key, d_in, d_h):
+    k1, k2 = jax.random.split(key)
+    s = 1.0 / math.sqrt(d_h)
+    return {
+        "wi": jax.random.uniform(k1, (d_in, 4 * d_h), minval=-s, maxval=s),
+        "wh": jax.random.uniform(k2, (d_h, 4 * d_h), minval=-s, maxval=s),
+        "b": jnp.zeros((4 * d_h,)),
+    }
+
+
+def init_lstm_model(key, d_in: int, d_h: int, n_classes: int):
+    ks = jax.random.split(key, 4)
+    return {
+        "lstm0": _init_lstm_layer(ks[0], d_in, d_h),
+        "lstm1": _init_lstm_layer(ks[1], d_h, d_h),
+        "fc": {"w": jax.random.normal(ks[2], (d_h, d_h)) / math.sqrt(d_h),
+               "b": jnp.zeros((d_h,))},
+        "out": {"w": jax.random.normal(ks[3], (d_h, n_classes)) / math.sqrt(d_h),
+                "b": jnp.zeros((n_classes,))},
+    }
+
+
+def _lstm_layer(p, x):
+    """x: [B, T, d_in] -> outputs [B, T, d_h]."""
+    B = x.shape[0]
+    d_h = p["wh"].shape[0]
+
+    def cell(carry, xt):
+        h, c = carry
+        gates = xt @ p["wi"] + h @ p["wh"] + p["b"]
+        i, f, g, o = jnp.split(gates, 4, axis=-1)
+        c = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+        h = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return (h, c), h
+
+    init = (jnp.zeros((B, d_h)), jnp.zeros((B, d_h)))
+    _, hs = jax.lax.scan(cell, init, x.transpose(1, 0, 2))
+    return hs.transpose(1, 0, 2)
+
+
+def lstm_apply(p, x, *, dropout_rng: Optional[jax.Array] = None,
+               dropout: float = 0.1):
+    """x: [B, T, d_in] -> logits [B, C]."""
+    h = _lstm_layer(p["lstm0"], x)
+    if dropout_rng is not None:
+        keep = jax.random.bernoulli(dropout_rng, 1.0 - dropout, h.shape)
+        h = jnp.where(keep, h / (1.0 - dropout), 0.0)
+    h = _lstm_layer(p["lstm1"], h)[:, -1, :]                  # last hidden
+    h = jax.nn.relu(h @ p["fc"]["w"] + p["fc"]["b"])
+    return h @ p["out"]["w"] + p["out"]["b"]
+
+
+# ---------------------------------------------------------------------------
+# CNN submodel
+# ---------------------------------------------------------------------------
+def init_cnn_model(key, n_classes: int = 6, in_ch: int = 3,
+                   conv_scale: float = 0.35):
+    """conv_scale < He: tames activation growth through the three
+    maxpool(ReLU(conv)) stages so plain BGD at the shared η is stable
+    (calibrated in EXPERIMENTS.md §Repro setup)."""
+    ks = jax.random.split(key, 6)
+
+    def conv(k, ci, co):
+        return (jax.random.normal(k, (5, 5, ci, co))
+                * math.sqrt(2.0 / (25 * ci)) * conv_scale)
+
+    return {
+        "c0": conv(ks[0], in_ch, 16),
+        "c1": conv(ks[1], 16, 16),
+        "c2": conv(ks[2], 16, 16),
+        "fc0": {"w": jax.random.normal(ks[3], (64, 64)) / 8.0,
+                "b": jnp.zeros((64,))},
+        "fc1": {"w": jax.random.normal(ks[4], (64, 32)) / 8.0,
+                "b": jnp.zeros((32,))},
+        "out": {"w": jax.random.normal(ks[5], (32, n_classes)) / math.sqrt(32),
+                "b": jnp.zeros((n_classes,))},
+    }
+
+
+def _conv_pool(x, w):
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    y = jax.nn.relu(y)
+    y = jax.lax.reduce_window(
+        y, -jnp.inf, jax.lax.max, window_dimensions=(1, 5, 5, 1),
+        window_strides=(1, 3, 3, 1), padding="SAME")
+    return y
+
+
+def cnn_apply(p, x, **_):
+    """x: [B, 48, 48, 3] -> logits [B, C]."""
+    y = _conv_pool(x, p["c0"])      # 16x16
+    y = _conv_pool(y, p["c1"])      # 6x6
+    y = _conv_pool(y, p["c2"])      # 2x2
+    y = y.reshape(y.shape[0], -1)   # 64
+    y = jax.nn.relu(y @ p["fc0"]["w"] + p["fc0"]["b"])
+    y = jax.nn.relu(y @ p["fc1"]["w"] + p["fc1"]["b"])
+    return y @ p["out"]["w"] + p["out"]["b"]
+
+
+# ---------------------------------------------------------------------------
+# dataset-level multimodal model builders
+# ---------------------------------------------------------------------------
+def init_crema_model(key):
+    """CREMA-D: audio LSTM (11->50, 6 cls) + image CNN (48x48x3, 6 cls)."""
+    k1, k2 = jax.random.split(key)
+    return {"audio": init_lstm_model(k1, 11, 50, 6),
+            "image": init_cnn_model(k2, 6)}
+
+
+def init_iemocap_model(key):
+    """IEMOCAP: audio LSTM (11->50, 10 cls) + text LSTM (100->60, 10 cls)."""
+    k1, k2 = jax.random.split(key)
+    return {"audio": init_lstm_model(k1, 11, 50, 10),
+            "text": init_lstm_model(k2, 100, 60, 10)}
+
+
+MODAL_APPLY = {"audio": lstm_apply, "text": lstm_apply, "image": cnn_apply}
+
+
+def modal_logits(params, inputs: dict, *, dropout_rng=None):
+    """Per-modality logits for whichever modalities are present in `inputs`."""
+    out = {}
+    for m, x in inputs.items():
+        rng = None
+        if dropout_rng is not None:
+            rng = jax.random.fold_in(dropout_rng, hash(m) % (2 ** 31))
+        out[m] = MODAL_APPLY[m](params[m], x, dropout_rng=rng)
+    return out
+
+
+def param_bits(params, bits_per_param: int = 32) -> int:
+    """Upload size in bits (cf. paper's l_m table)."""
+    return sum(x.size for x in jax.tree.leaves(params)) * bits_per_param

@@ -1,0 +1,263 @@
+"""Decoder-only LM supporting dense / MoE / hybrid / SSM stacks.
+
+The layer stack is ``lax.scan`` over ``n_blocks`` repetitions of the config's
+super-block (cf. ``ModelConfig.block_pattern``), with per-block params stacked
+on a leading axis — HLO size stays constant in depth, which keeps the 512-device
+dry-run compiles tractable.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import LayerSpec, ModelConfig
+from . import layers as L
+from .moe import init_moe, moe_apply
+from .mamba2 import (init_mamba, init_mamba_cache, mamba_decode, mamba_fwd)
+
+
+# ----------------------------------------------------------------------------
+# per-layer init / apply
+# ----------------------------------------------------------------------------
+def init_layer(key, cfg: ModelConfig, spec: LayerSpec):
+    k1, k2 = jax.random.split(key)
+    dt = cfg.param_dtype
+    p = {"norm1": jnp.zeros((cfg.d_model,), dt)}
+    if spec.kind == "attn":
+        p["mixer"] = L.init_attention(k1, cfg)
+    else:
+        p["mixer"] = init_mamba(k1, cfg)
+    if spec.moe:
+        p["norm2"] = jnp.zeros((cfg.d_model,), dt)
+        p["ffn"] = init_moe(k2, cfg)
+    elif cfg.d_ff > 0:
+        p["norm2"] = jnp.zeros((cfg.d_model,), dt)
+        p["ffn"] = L.init_mlp(k2, cfg)
+    return p
+
+
+def apply_layer(p, x, cfg: ModelConfig, spec: LayerSpec, *, n_groups: int = 1,
+                attn_chunk: int = 1024):
+    aux = jnp.zeros((), jnp.float32)
+    h = L.rms_norm(x, p["norm1"], cfg.norm_eps)
+    if spec.kind == "attn":
+        h = L.attention_fwd(p["mixer"], h, cfg, window=spec.window,
+                            chunk=attn_chunk)
+    else:
+        h = mamba_fwd(p["mixer"], h, cfg)
+    x = x + h
+    if "ffn" in p:
+        h = L.rms_norm(x, p["norm2"], cfg.norm_eps)
+        if spec.moe:
+            h, aux = moe_apply(p["ffn"], h, cfg, n_groups=n_groups)
+        else:
+            h = L.mlp(p["ffn"], h)
+        x = x + h
+    return x, aux
+
+
+def init_layer_cache(cfg: ModelConfig, spec: LayerSpec, batch: int, seq: int,
+                     dtype):
+    if spec.kind == "attn":
+        return L.init_attn_cache(cfg, batch, seq, spec.window, dtype)
+    return init_mamba_cache(cfg, batch, dtype)
+
+
+def apply_layer_decode(p, x, cache, index, cfg: ModelConfig, spec: LayerSpec):
+    h = L.rms_norm(x, p["norm1"], cfg.norm_eps)
+    if spec.kind == "attn":
+        h, cache = L.attention_decode(p["mixer"], h, cache, index, cfg,
+                                      window=spec.window)
+    else:
+        h, cache = mamba_decode(p["mixer"], h, cache, cfg)
+    x = x + h
+    if "ffn" in p:
+        h = L.rms_norm(x, p["norm2"], cfg.norm_eps)
+        if spec.moe:
+            h, _ = moe_apply(p["ffn"], h, cfg, n_groups=1)
+        else:
+            h = L.mlp(p["ffn"], h)
+        x = x + h
+    return x, cache
+
+
+# ----------------------------------------------------------------------------
+# whole model
+# ----------------------------------------------------------------------------
+def init_params(key, cfg: ModelConfig):
+    pattern = cfg.block_pattern()
+    ks = jax.random.split(key, 3)
+    dt = cfg.param_dtype
+
+    def one_block(bk):
+        bks = jax.random.split(bk, len(pattern))
+        return {f"l{i}": init_layer(bks[i], cfg, spec)
+                for i, spec in enumerate(pattern)}
+
+    block_keys = jax.random.split(ks[0], cfg.n_blocks)
+    blocks = jax.vmap(one_block)(block_keys)
+    p = {
+        "embed": (jax.random.normal(ks[1], (cfg.vocab_size, cfg.d_model),
+                                    jnp.float32) * 0.02).astype(dt),
+        "blocks": blocks,
+        "final_norm": jnp.zeros((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = (jax.random.normal(ks[2], (cfg.d_model, cfg.vocab_size),
+                                          jnp.float32) * 0.02).astype(dt)
+    return p
+
+
+def backbone(params, x, cfg: ModelConfig, *, n_groups: int = 1,
+             attn_chunk: int = 1024, residual_spec=None, remat: bool = False):
+    """x: [B, S, D] embeddings -> (hidden [B,S,D], moe_aux scalar).
+
+    ``residual_spec``: optional PartitionSpec constraint re-applied to the
+    residual stream after every super-block (e.g. sequence-over-model
+    sharding — Megatron-style sequence parallelism; used by the §Perf
+    hillclimbs).  ``remat``: activation-checkpoint each super-block.
+    """
+    pattern = cfg.block_pattern()
+
+    def blk(h, bp):
+        aux = jnp.zeros((), jnp.float32)
+        for i, spec in enumerate(pattern):
+            h, a = apply_layer(bp[f"l{i}"], h, cfg, spec, n_groups=n_groups,
+                               attn_chunk=attn_chunk)
+            aux = aux + a
+        if residual_spec is not None:
+            h = jax.lax.with_sharding_constraint(h, residual_spec)
+        return h, aux
+
+    if remat:
+        blk = jax.checkpoint(blk)
+
+    def scan_body(carry, bp):
+        return blk(carry, bp)
+
+    x, auxs = jax.lax.scan(scan_body, x, params["blocks"])
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, jnp.sum(auxs)
+
+
+def embed_tokens(params, tokens, cfg: ModelConfig):
+    return params["embed"][tokens]
+
+
+def unembed(params, h, cfg: ModelConfig):
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return h @ w
+
+
+def forward(params, tokens, cfg: ModelConfig, *, n_groups: int = 1,
+            attn_chunk: int = 1024, **bk):
+    """tokens [B,S] -> (logits [B,S,V], moe_aux)."""
+    x = embed_tokens(params, tokens, cfg)
+    h, aux = backbone(params, x, cfg, n_groups=n_groups,
+                      attn_chunk=attn_chunk, **bk)
+    return unembed(params, h, cfg), aux
+
+
+def lm_loss(logits, labels, mask=None):
+    """Mean next-token CE in fp32. logits [B,S,V], labels [B,S]."""
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(logits.astype(jnp.float32),
+                               labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is None:
+        return nll.mean()
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def chunked_lm_loss(params, h, labels, cfg: ModelConfig, chunk: int):
+    """Fused unembed + CE over sequence chunks: the [B,S,V] logits tensor is
+    never materialised — per chunk only [B,chunk,V] exists (the XLA-side
+    analogue of the fusion_loss Pallas kernel's streaming pass; §Perf
+    hillclimb lever for memory-bound training shapes)."""
+    B, S, D = h.shape
+    chunk = min(chunk, S)
+    while S % chunk != 0:
+        chunk //= 2
+    nc = S // chunk
+    hc = h.reshape(B, nc, chunk, D).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, nc, chunk).transpose(1, 0, 2)
+
+    def body(tot, xs):
+        hh, ll = xs
+        logits = unembed(params, hh, cfg)
+        lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+        gold = jnp.take_along_axis(logits.astype(jnp.float32),
+                                   ll[..., None], axis=-1)[..., 0]
+        return tot + (lse - gold).sum(), None
+
+    tot, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hc, lc))
+    return tot / (B * S)
+
+
+def loss_fn(params, batch, cfg: ModelConfig, *, n_groups: int = 1,
+            attn_chunk: int = 1024, aux_weight: float = 0.01,
+            loss_chunk: Optional[int] = None, **bk):
+    if loss_chunk:
+        x = embed_tokens(params, batch["tokens"], cfg)
+        h, aux = backbone(params, x, cfg, n_groups=n_groups,
+                          attn_chunk=attn_chunk, **bk)
+        return (chunked_lm_loss(params, h, batch["labels"], cfg, loss_chunk)
+                + aux_weight * aux)
+    logits, aux = forward(params, batch["tokens"], cfg, n_groups=n_groups,
+                          attn_chunk=attn_chunk, **bk)
+    return lm_loss(logits, batch["labels"], batch.get("mask")) + aux_weight * aux
+
+
+# ----------------------------------------------------------------------------
+# serving: prefill + decode
+# ----------------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, batch: int, seq: int, dtype=None):
+    dtype = dtype or cfg.param_dtype
+    pattern = cfg.block_pattern()
+
+    def one(spec):
+        return init_layer_cache(cfg, spec, batch, seq, dtype)
+
+    single = {f"l{i}": one(spec) for i, spec in enumerate(pattern)}
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (cfg.n_blocks,) + a.shape), single)
+
+
+def decode_step(params, cache, token, index, cfg: ModelConfig):
+    """token [B,1] int32; index scalar int32 (#tokens already cached).
+
+    Returns (logits [B,1,V], new_cache).
+    """
+    pattern = cfg.block_pattern()
+    x = embed_tokens(params, token, cfg)
+
+    def blk(carry, inp):
+        h = carry
+        bp, bc = inp
+        newc = {}
+        for i, spec in enumerate(pattern):
+            h, c = apply_layer_decode(bp[f"l{i}"], h, bc[f"l{i}"], index, cfg,
+                                      spec)
+            newc[f"l{i}"] = c
+        return h, newc
+
+    h, new_cache = jax.lax.scan(blk, x, (params["blocks"], cache))
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    return unembed(params, h, cfg), new_cache
+
+
+def prefill(params, tokens, cfg: ModelConfig, *, n_groups: int = 1,
+            attn_chunk: int = 1024, **bk):
+    """Prefill forward: returns logits of the LAST position [B, V].
+
+    (Cache materialisation during prefill is a serving-layer concern — cf.
+    ``launch/serve.py`` which prefills then decodes; the dry-run lowers this
+    function for the prefill shapes.)
+    """
+    x = embed_tokens(params, tokens, cfg)
+    h, _ = backbone(params, x, cfg, n_groups=n_groups,
+                    attn_chunk=attn_chunk, **bk)
+    return unembed(params, h[:, -1:, :], cfg)[:, 0, :]

@@ -1,0 +1,175 @@
+"""Pytree optimizers (no optax dependency).
+
+API: each factory returns an object with
+    init(params)            -> state
+    update(grads, state, params) -> (updates, state)
+Apply with ``apply_updates(params, updates)`` (updates are *added*).
+
+Adafactor implements factored second moments (Shazeer & Stern 2018) — the
+memory-sane choice for the ≥52B assigned architectures (see DESIGN.md §5 note
+on kimi-k2's optimizer-state footprint).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.vdot(x, x).real for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    g = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(g, 1e-12))
+    return jax.tree.map(lambda x: x * scale, grads), g
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u.astype(p.dtype)), params, updates)
+
+
+@dataclasses.dataclass
+class Optimizer:
+    init: Callable
+    update: Callable
+
+
+# ---------------------------------------------------------------------------
+def sgd(lr):
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params=None):
+        step = state["step"]
+        upd = jax.tree.map(lambda g: -lr_fn(step) * g.astype(jnp.float32), grads)
+        return upd, {"step": step + 1}
+
+    return Optimizer(init, update)
+
+
+def momentum(lr, beta: float = 0.9):
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)}
+
+    def update(grads, state, params=None):
+        m = jax.tree.map(lambda m_, g: beta * m_ + g.astype(jnp.float32),
+                         state["m"], grads)
+        upd = jax.tree.map(lambda m_: -lr_fn(state["step"]) * m_, m)
+        return upd, {"step": state["step"] + 1, "m": m}
+
+    return Optimizer(init, update)
+
+
+def adam(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0):
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, jnp.float32)
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": jax.tree.map(z, params), "v": jax.tree.map(z, params)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) *
+                         jnp.square(g.astype(jnp.float32)), state["v"], grads)
+        t = step.astype(jnp.float32)
+        bc1 = 1 - b1 ** t
+        bc2 = 1 - b2 ** t
+
+        def upd(m_, v_, p):
+            u = -(lr_fn(step) * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps))
+            if weight_decay:
+                u = u - lr_fn(step) * weight_decay * p.astype(jnp.float32)
+            return u
+
+        return (jax.tree.map(upd, m, v, params),
+                {"step": step, "m": m, "v": v})
+
+    return Optimizer(init, update)
+
+
+def adamw(lr, weight_decay: float = 0.01, **kw):
+    return adam(lr, weight_decay=weight_decay, **kw)
+
+
+def adafactor(lr, eps: float = 1e-30, clip_threshold: float = 1.0,
+              decay: float = 0.8):
+    """Factored second-moment optimizer: O(n+m) state for an n x m matrix."""
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        def zf(p):
+            if p.ndim >= 2:
+                return {"r": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "c": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros_like(p, jnp.float32)}
+        return {"step": jnp.zeros((), jnp.int32),
+                "f": jax.tree.map(zf, params,
+                                  is_leaf=lambda x: isinstance(x, jax.Array))}
+
+    def update(grads, state, params=None):
+        step = state["step"] + 1
+        t = step.astype(jnp.float32)
+        beta = 1.0 - t ** (-decay)
+
+        def upd(g, f):
+            g32 = g.astype(jnp.float32)
+            g2 = jnp.square(g32) + eps
+            if g.ndim >= 2:
+                r = beta * f["r"] + (1 - beta) * g2.mean(axis=-1)
+                c = beta * f["c"] + (1 - beta) * g2.mean(axis=-2)
+                vhat = (r[..., None] * c[..., None, :]
+                        / jnp.maximum(r.mean(-1, keepdims=True)[..., None], eps))
+                newf = {"r": r, "c": c}
+            else:
+                v = beta * f["v"] + (1 - beta) * g2
+                vhat = v
+                newf = {"v": v}
+            u = g32 * jax.lax.rsqrt(vhat + eps)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + eps)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            return -lr_fn(step) * u, newf
+
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_f = tdef.flatten_up_to(state["f"])
+        outs = [upd(g, f) for g, f in zip(flat_g, flat_f)]
+        updates = tdef.unflatten([o[0] for o in outs])
+        newfs = tdef.unflatten([o[1] for o in outs])
+        return updates, {"step": step, "f": newfs}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+def cosine_schedule(base_lr: float, total_steps: int, min_frac: float = 0.1):
+    def lr(step):
+        frac = jnp.clip(step / total_steps, 0.0, 1.0)
+        return base_lr * (min_frac + (1 - min_frac) * 0.5 *
+                          (1 + jnp.cos(jnp.pi * frac)))
+    return lr
+
+
+def warmup_cosine(base_lr: float, warmup: int, total_steps: int,
+                  min_frac: float = 0.05):
+    cos = cosine_schedule(base_lr, max(total_steps - warmup, 1), min_frac)
+
+    def lr(step):
+        w = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        return jnp.where(step < warmup, base_lr * w, cos(step - warmup))
+    return lr
+
+
+OPTIMIZERS = {"sgd": sgd, "momentum": momentum, "adam": adam,
+              "adamw": adamw, "adafactor": adafactor}

@@ -1,0 +1,34 @@
+"""Lyapunov virtual energy queues (§V-A).
+
+Q_k^{t+1} = max(Q_k^t − q_k^t, 0) with q_k = E_add − a_k (e_com + e_cmp).
+Mean-rate stability of Q is equivalent to the long-term energy constraint C5
+(Eq. 29); the drift-plus-penalty weight V trades energy for MFL performance
+(Fig. 4).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class EnergyQueues:
+    def __init__(self, K: int):
+        self.Q = np.zeros(K)
+        self.spent = np.zeros(K)       # cumulative actual energy [J]
+        self.t = 0
+
+    def step(self, a: np.ndarray, e_com: np.ndarray, e_cmp: np.ndarray,
+             E_add: float) -> np.ndarray:
+        a = np.asarray(a, float)
+        used = a * (e_com + e_cmp)
+        q = E_add - used
+        self.Q = np.maximum(self.Q - q, 0.0)
+        self.spent += used
+        self.t += 1
+        return q
+
+    def mean_queue(self) -> float:
+        return float(self.Q.mean())
+
+    def stability_metric(self) -> float:
+        """|Q^T|/T → 0 is C5' (Eq. 29)."""
+        return float(np.abs(self.Q).mean() / max(self.t, 1))

@@ -1,0 +1,215 @@
+"""Client scheduling strategies.
+
+* ``JCSBAScheduler`` — the paper's algorithm: per-round P3 objective
+  J₂(a) = V·ηρ√(A₁+A₂) + Σ_k a_k Q_k (e_com_k(B*) + e_cmp_k)
+  (the −Σ Q_k E_add constant is dropped, §V-A), inner bandwidth by the KKT
+  solver, outer search by the immune algorithm.
+* Baselines from §VI: Random, Round-Robin (equal bandwidth), Selection [26]
+  (fixed ratios per modality-combination, picked by model distance), and
+  Dropout [28] (random scheduling + modality dropout on multimodal clients —
+  the dropout itself is applied by the FL client, flagged here).
+
+All schedulers return ``ScheduleDecision`` with the participation vector, the
+bandwidth allocation and per-client modality-dropout flags.  Clients whose
+latency constraint ends up violated (possible under the naive equal-bandwidth
+baselines) are marked as transmission failures by the runtime.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from .bandwidth import allocate, b_min
+from .channel import uplink_rate
+from .cost import ClientCost, com_energy, com_latency
+from .params import WirelessParams
+from ..core.convergence import BoundState
+
+
+@dataclasses.dataclass
+class ScheduleContext:
+    h: np.ndarray                       # channel gains this round
+    Q: np.ndarray                       # Lyapunov queues
+    cost: ClientCost
+    params: WirelessParams
+    bound: Optional[BoundState]
+    round_idx: int
+    model_dist: Optional[np.ndarray] = None   # ||θ_k − θ⁰|| for Selection
+    client_modalities: Optional[Sequence[Sequence[str]]] = None
+
+
+@dataclasses.dataclass
+class ScheduleDecision:
+    a: np.ndarray                       # bool [K]
+    B: np.ndarray                       # [K] Hz
+    dropout_modality: Optional[List[Optional[str]]] = None
+    objective: float = np.nan
+
+
+def _equal_bandwidth(a: np.ndarray, params: WirelessParams) -> np.ndarray:
+    B = np.zeros(len(a))
+    n = int(a.sum())
+    if n:
+        B[a] = params.B_max / n
+    return B
+
+
+class Scheduler:
+    name = "base"
+
+    def schedule(self, ctx: ScheduleContext) -> ScheduleDecision:  # pragma: no cover
+        raise NotImplementedError
+
+
+class RandomScheduler(Scheduler):
+    """Random client subset, equal bandwidth split."""
+    name = "random"
+
+    def __init__(self, rng: np.random.Generator, n_sched: int = 4):
+        self.rng = rng
+        self.n_sched = n_sched
+
+    def schedule(self, ctx: ScheduleContext) -> ScheduleDecision:
+        K = len(ctx.h)
+        a = np.zeros(K, bool)
+        a[self.rng.choice(K, size=min(self.n_sched, K), replace=False)] = True
+        return ScheduleDecision(a, _equal_bandwidth(a, ctx.params))
+
+
+class RoundRobinScheduler(Scheduler):
+    """Cycle through clients in fixed order, equal bandwidth."""
+    name = "round_robin"
+
+    def __init__(self, n_sched: int = 4):
+        self.n_sched = n_sched
+        self._next = 0
+
+    def schedule(self, ctx: ScheduleContext) -> ScheduleDecision:
+        K = len(ctx.h)
+        a = np.zeros(K, bool)
+        for i in range(min(self.n_sched, K)):
+            a[(self._next + i) % K] = True
+        self._next = (self._next + self.n_sched) % K
+        return ScheduleDecision(a, _equal_bandwidth(a, ctx.params))
+
+
+class SelectionScheduler(Scheduler):
+    """[26]: fixed selection ratio per modality-combination group; within each
+    group pick the clients whose local model moved farthest from θ⁰."""
+    name = "selection"
+
+    def __init__(self, rng: np.random.Generator, ratio: float = 0.4):
+        self.rng = rng
+        self.ratio = ratio
+
+    def schedule(self, ctx: ScheduleContext) -> ScheduleDecision:
+        K = len(ctx.h)
+        mods = ctx.client_modalities or [("m",)] * K
+        groups: Dict[frozenset, List[int]] = {}
+        for k in range(K):
+            groups.setdefault(frozenset(mods[k]), []).append(k)
+        a = np.zeros(K, bool)
+        dist = ctx.model_dist if ctx.model_dist is not None else np.zeros(K)
+        for g in groups.values():
+            n_pick = max(1, int(round(self.ratio * len(g))))
+            order = sorted(g, key=lambda k: -dist[k])
+            for k in order[:n_pick]:
+                a[k] = True
+        return ScheduleDecision(a, _equal_bandwidth(a, ctx.params))
+
+
+class DropoutScheduler(Scheduler):
+    """[28]: random scheduling; multimodal clients drop one modality w.p. p."""
+    name = "dropout"
+
+    def __init__(self, rng: np.random.Generator, n_sched: int = 4,
+                 p_drop: float = 0.3):
+        self.rng = rng
+        self.n_sched = n_sched
+        self.p_drop = p_drop
+
+    def schedule(self, ctx: ScheduleContext) -> ScheduleDecision:
+        K = len(ctx.h)
+        a = np.zeros(K, bool)
+        a[self.rng.choice(K, size=min(self.n_sched, K), replace=False)] = True
+        drops: List[Optional[str]] = [None] * K
+        mods = ctx.client_modalities or [()] * K
+        for k in range(K):
+            if a[k] and len(mods[k]) > 1 and self.rng.random() < self.p_drop:
+                drops[k] = str(self.rng.choice(sorted(mods[k])))
+        return ScheduleDecision(a, _equal_bandwidth(a, ctx.params), drops)
+
+
+class JCSBAScheduler(Scheduler):
+    """The paper's joint client-scheduling + bandwidth-allocation algorithm."""
+    name = "jcsba"
+
+    def __init__(self, rng: np.random.Generator, V: float = 1.0,
+                 immune_kwargs: Optional[dict] = None):
+        self.rng = rng
+        self.V = V
+        self.immune_kwargs = immune_kwargs or {}
+        self._last_a: Optional[np.ndarray] = None
+
+    # -- inner: bandwidth for a candidate a; returns (B, J2) or (None, inf) --
+    def _evaluate(self, a: np.ndarray, ctx: ScheduleContext):
+        K = len(ctx.h)
+        part = np.flatnonzero(a)
+        bound_term = (ctx.bound.objective(a.astype(float))
+                      if ctx.bound is not None else 0.0)
+        if len(part) == 0:
+            return np.zeros(K), self.V * bound_term
+        tau_rem = ctx.params.tau_max - ctx.cost.tau_cmp[part]
+        Bp = allocate(ctx.Q[part], ctx.cost.gamma_bits[part], ctx.h[part],
+                      tau_rem, ctx.params)
+        if Bp is None:
+            return None, np.inf
+        B = np.zeros(K)
+        B[part] = Bp
+        tcom = com_latency(B[part], ctx.h[part], ctx.cost.gamma_bits[part],
+                           ctx.params)
+        ecom = com_energy(tcom, ctx.params)
+        J2 = (self.V * bound_term
+              + float((ctx.Q[part] * (ecom + ctx.cost.e_cmp[part])).sum()))
+        return B, J2
+
+    def schedule(self, ctx: ScheduleContext) -> ScheduleDecision:
+        from .immune import immune_search
+        K = len(ctx.h)
+
+        def eval_fn(a):
+            _, J = self._evaluate(np.asarray(a, bool), ctx)
+            return J
+
+        seeds = []
+        if self._last_a is not None:
+            seeds.append(self._last_a)
+        seeds.append(np.zeros(K, bool))
+        a_star, J_star = immune_search(
+            eval_fn, K, self.rng,
+            seed_antibodies=np.array(seeds) if seeds else None,
+            **self.immune_kwargs)
+        B, _ = self._evaluate(a_star, ctx)
+        if B is None:                                   # paranoid fallback
+            a_star = np.zeros(K, bool)
+            B = np.zeros(K)
+        self._last_a = a_star.copy()
+        return ScheduleDecision(a_star, B, objective=J_star)
+
+
+def make_scheduler(name: str, rng: np.random.Generator, **kw) -> Scheduler:
+    name = name.lower()
+    if name == "random":
+        return RandomScheduler(rng, **kw)
+    if name in ("round_robin", "roundrobin"):
+        return RoundRobinScheduler(**kw)
+    if name == "selection":
+        return SelectionScheduler(rng, **kw)
+    if name == "dropout":
+        return DropoutScheduler(rng, **kw)
+    if name == "jcsba":
+        return JCSBAScheduler(rng, **kw)
+    raise ValueError(f"unknown scheduler {name!r}")

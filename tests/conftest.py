@@ -1,0 +1,13 @@
+import os
+
+# Tests must see exactly ONE CPU device (the 512-device flag is dry-run-only;
+# the mini dry-run test spawns a subprocess with its own XLA_FLAGS).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

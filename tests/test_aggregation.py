@@ -1,0 +1,99 @@
+"""Per-modality aggregation (Eqs. 9-12): unbiasedness + weight properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import aggregation as agg
+
+
+MODS = ["audio", "image"]
+
+
+def _mk_clients(rng, K):
+    """Random client modality sets (each keeps >= 1 modality) + data sizes."""
+    mods = []
+    for _ in range(K):
+        pick = rng.integers(1, 4)  # 1=audio, 2=image, 3=both
+        mods.append(tuple(m for i, m in enumerate(MODS) if pick >> i & 1))
+    sizes = rng.integers(10, 100, K).tolist()
+    return mods, sizes
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 10), st.integers(0, 2 ** 31 - 1))
+def test_property_unified_weights_sum_to_one(K, seed):
+    rng = np.random.default_rng(seed)
+    mods, sizes = _mk_clients(rng, K)
+    w = agg.unified_weights(sizes, mods, MODS)
+    for m in MODS:
+        s = w[m].sum()
+        assert s == 0.0 or abs(s - 1.0) < 1e-9
+        for k in range(K):
+            if m not in mods[k]:
+                assert w[m][k] == 0.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 8), st.integers(0, 2 ** 31 - 1))
+def test_property_participated_weights_renormalise(K, seed):
+    rng = np.random.default_rng(seed)
+    mods, sizes = _mk_clients(rng, K)
+    part = [k for k in range(K) if rng.random() < 0.5]
+    w = agg.participated_weights(sizes, mods, part, MODS)
+    for m in MODS:
+        contributors = [k for k in part if m in mods[k]]
+        if contributors:
+            assert abs(w[m].sum() - 1.0) < 1e-9
+        else:
+            assert w[m].sum() == 0.0
+
+
+def test_full_participation_unbiased():
+    """Eq. 10: full participation reproduces the unified-weight aggregate."""
+    rng = np.random.default_rng(0)
+    K = 5
+    mods, sizes = _mk_clients(rng, K)
+    g = {m: {"w": jnp.zeros((3,))} for m in MODS}
+    client_params = []
+    for k in range(K):
+        client_params.append({m: {"w": jnp.asarray(rng.normal(size=3),
+                                                   jnp.float32)}
+                              for m in mods[k]})
+    w_full = agg.participated_weights(sizes, mods, range(K), MODS)
+    w_bar = agg.unified_weights(sizes, mods, MODS)
+    out1 = agg.aggregate(g, client_params, w_full)
+    out2 = agg.aggregate(g, client_params, w_bar)
+    for m in MODS:
+        np.testing.assert_allclose(out1[m]["w"], out2[m]["w"], rtol=1e-6)
+
+
+def test_unseen_modality_keeps_global():
+    g = {"audio": {"w": jnp.ones((2,))}, "image": {"w": 2 * jnp.ones((2,))}}
+    cp = [{"audio": {"w": jnp.zeros((2,))}}, None]
+    w = agg.weights_from_uploads([10, 10], cp, MODS)
+    out = agg.aggregate(g, cp, w)
+    np.testing.assert_allclose(out["image"]["w"], 2 * np.ones(2))   # unchanged
+    np.testing.assert_allclose(out["audio"]["w"], np.zeros(2))
+
+
+def test_weights_from_uploads_handles_dropout():
+    """A client that dropped a modality must not dilute that modality's
+    aggregate (the convex-combination property)."""
+    cp = [{"audio": 1}, {"audio": 1, "image": 1}, None]
+    w = agg.weights_from_uploads([10, 30, 60], cp, MODS)
+    assert abs(w["audio"].sum() - 1.0) < 1e-9
+    assert abs(w["image"].sum() - 1.0) < 1e-9
+    assert w["image"][0] == 0.0 and w["image"][2] == 0.0
+    assert w["image"][1] == 1.0
+
+
+def test_aggregate_gradients_matches_manual():
+    rng = np.random.default_rng(0)
+    g1 = {"audio": {"w": jnp.asarray(rng.normal(size=3), jnp.float32)}}
+    g2 = {"audio": {"w": jnp.asarray(rng.normal(size=3), jnp.float32)}}
+    w = {"audio": np.array([0.25, 0.75])}
+    out = agg.aggregate_gradients([g1, g2], w)
+    np.testing.assert_allclose(
+        out["audio"]["w"], 0.25 * g1["audio"]["w"] + 0.75 * g2["audio"]["w"],
+        rtol=1e-6)

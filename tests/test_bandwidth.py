@@ -1,0 +1,103 @@
+"""KKT bandwidth allocation (P4.2', Eqs. 41-49): feasibility + optimality."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.wireless import bandwidth as bw
+from repro.wireless.channel import uplink_rate
+from repro.wireless.params import WirelessParams
+
+P = WirelessParams()
+
+
+def _random_instance(rng, U):
+    h = 10 ** rng.uniform(-7, -4, U)          # plausible channel gains
+    Q = rng.uniform(0.0, 2.0, U)
+    gamma = rng.uniform(3e5, 1.2e6, U)
+    tau_rem = rng.uniform(0.004, 0.0095, U)
+    return Q, gamma, h, tau_rem
+
+
+def test_b_min_meets_latency_exactly():
+    rng = np.random.default_rng(0)
+    Q, gamma, h, tau_rem = _random_instance(rng, 5)
+    for i in range(5):
+        b = bw.b_min(gamma[i], h[i], tau_rem[i], P)
+        if b is None:
+            continue
+        r = uplink_rate(np.array([b]), np.array([h[i]]), P)[0]
+        assert r == pytest.approx(gamma[i] / tau_rem[i], rel=1e-3)
+
+
+def test_b_min_infeasible_when_ceiling_too_low():
+    # terrible channel: even infinite bandwidth can't meet the deadline
+    assert bw.b_min(1e7, 1e-12, 0.001, P) is None
+    assert bw.b_min(1e6, 1e-6, -0.1, P) is None     # no compute budget left
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 4), st.integers(0, 2 ** 31 - 1))
+def test_property_allocation_is_feasible(U, seed):
+    rng = np.random.default_rng(seed)
+    Q, gamma, h, tau_rem = _random_instance(rng, U)
+    B = bw.allocate(Q, gamma, h, tau_rem, P)
+    if B is None:
+        # must genuinely be infeasible: sum of minimum bandwidths > B_max
+        bmins = [bw.b_min(gamma[i], h[i], tau_rem[i], P) for i in range(U)]
+        assert any(b is None for b in bmins) or sum(bmins) > P.B_max
+        return
+    assert np.all(B > 0)
+    assert B.sum() <= P.B_max * (1 + 1e-6)
+    r = uplink_rate(B, h, P)
+    tau_com = gamma / r
+    assert np.all(tau_com <= tau_rem * (1 + 1e-3))     # In1 satisfied
+
+
+def test_kkt_beats_equal_split():
+    """The KKT point must not be worse than naive equal bandwidth on J3."""
+    rng = np.random.default_rng(7)
+    for _ in range(10):
+        U = 3
+        Q, gamma, h, tau_rem = _random_instance(rng, U)
+        B = bw.allocate(Q, gamma, h, tau_rem, P)
+        if B is None:
+            continue
+
+        def J3(Bv):
+            r = uplink_rate(Bv, h, P)
+            return float((Q * P.p_tx * gamma / r).sum())
+
+        Beq = np.full(U, P.B_max / U)
+        req = uplink_rate(Beq, h, P)
+        if np.all(gamma / req <= tau_rem):             # equal split feasible
+            assert J3(B) <= J3(Beq) * (1 + 1e-3)
+
+
+def test_kkt_matches_grid_search_two_clients():
+    """Equivalence with the paper's interval enumeration: brute-force the
+    2-client simplex and compare objectives."""
+    rng = np.random.default_rng(3)
+    hits = 0
+    for _ in range(20):
+        Q, gamma, h, tau_rem = _random_instance(rng, 2)
+        B = bw.allocate(Q, gamma, h, tau_rem, P)
+        if B is None:
+            continue
+        hits += 1
+
+        def J3(b1):
+            Bv = np.array([b1, P.B_max - b1])
+            r = uplink_rate(Bv, h, P)
+            tau = gamma / r
+            if np.any(tau > tau_rem):
+                return np.inf
+            return float((Q * P.p_tx * gamma / r).sum())
+
+        grid = np.linspace(1e3, P.B_max - 1e3, 4001)
+        best = min(J3(b) for b in grid)
+        got = J3(B[0] if abs(B.sum() - P.B_max) < 2 else B[0])
+        # allocate() may return sum < B_max only when pinned at minima
+        r = uplink_rate(B, h, P)
+        ours = float((Q * P.p_tx * gamma / r).sum())
+        assert ours <= best * (1 + 5e-3)
+    assert hits >= 3          # the regime must produce solvable instances

@@ -1,0 +1,97 @@
+"""Decode-vs-forward consistency: the cached serve path must reproduce the
+training forward logits token-by-token (validates RoPE positions, causal
+masks, ring-buffer sliding-window caches, and the Mamba2 chunked-vs-recurrent
+duality)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.models import transformer as T, encdec
+from repro.launch import steps
+
+
+def _teacher_force(cfg, params, tokens):
+    B, S = tokens.shape
+    cache = T.init_cache(cfg, B, S, jnp.float32)
+    step = jax.jit(lambda p, c, t, i: T.decode_step(p, c, t, i, cfg))
+    outs = []
+    for i in range(S):
+        logits, cache = step(params, cache, tokens[:, i:i + 1], jnp.int32(i))
+        outs.append(logits[:, 0])
+    return jnp.stack(outs, axis=1)
+
+
+@pytest.mark.parametrize("name", ["qwen3-0.6b", "gemma3-12b", "mamba2-370m",
+                                  "jamba-v0.1-52b", "kimi-k2-1t-a32b"])
+def test_decode_matches_forward(name):
+    cfg = ARCHS[name].reduced()
+    if cfg.ssm_state:
+        cfg = dataclasses.replace(cfg, ssm_chunk=8)
+    if cfg.n_experts:
+        # capacity dropping is train-path-only behaviour; give the router
+        # enough capacity that no token is dropped, so the two paths must
+        # agree exactly (drop behaviour itself is tested in test_moe.py)
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    rng = np.random.default_rng(0)
+    B, S = 2, 32
+    params = steps.init_fn(cfg)(jax.random.key(1))
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    full_logits, _ = T.forward(params, tokens, cfg, n_groups=1, attn_chunk=8)
+    dec_logits = _teacher_force(cfg, params, tokens)
+    err = float(jnp.abs(full_logits - dec_logits).max())
+    scale = float(jnp.abs(full_logits).max())
+    assert err < 2e-3 * max(scale, 1.0), f"{name}: decode diverges ({err})"
+
+
+def test_sliding_window_ring_buffer():
+    """Windowed decode cache smaller than the sequence still matches the
+    windowed training forward (ring-buffer correctness)."""
+    cfg = ARCHS["gemma3-12b"].reduced()
+    # all-local tiny config: window 8, 12 layers -> ring buffer wraps at S=32
+    cfg = dataclasses.replace(cfg, sliding_window=8)
+    rng = np.random.default_rng(0)
+    B, S = 1, 32
+    params = steps.init_fn(cfg)(jax.random.key(0))
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    full_logits, _ = T.forward(params, tokens, cfg, n_groups=1, attn_chunk=8)
+    dec_logits = _teacher_force(cfg, params, tokens)
+    err = float(jnp.abs(full_logits - dec_logits).max())
+    scale = float(jnp.abs(full_logits).max())
+    assert err < 2e-3 * max(scale, 1.0), f"ring buffer diverges ({err})"
+
+
+def test_whisper_decode_matches_forward():
+    cfg = ARCHS["whisper-base"].reduced()
+    rng = np.random.default_rng(0)
+    B, S, SRC = 2, 16, 24
+    params = steps.init_fn(cfg)(jax.random.key(0))
+    src = jnp.asarray(rng.normal(size=(B, SRC, cfg.d_model)), jnp.float32)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    enc = encdec.encode(params, src, cfg, attn_chunk=8)
+    full = encdec.decode_fwd(params, tokens, enc, cfg, attn_chunk=8)
+
+    from repro.models import layers as L
+    cache = encdec.init_dec_cache(cfg, B, S, SRC, jnp.float32)
+    ck, cv = [], []
+    for i in range(cfg.n_layers):
+        bp = jax.tree.map(lambda x: x[i], params["dec_blocks"])
+        ck.append(L.dense(bp["cross_attn"]["wk"], enc).reshape(
+            B, SRC, cfg.n_kv_heads, cfg.hd))
+        cv.append(L.dense(bp["cross_attn"]["wv"], enc).reshape(
+            B, SRC, cfg.n_kv_heads, cfg.hd))
+    cache["cross_k"] = jnp.stack(ck)
+    cache["cross_v"] = jnp.stack(cv)
+
+    step = jax.jit(lambda p, c, t, i: encdec.decode_step(p, c, t, i, cfg))
+    outs = []
+    for i in range(S):
+        logits, cache = step(params, cache, tokens[:, i:i + 1], jnp.int32(i))
+        outs.append(logits[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    err = float(jnp.abs(full - dec).max())
+    scale = float(jnp.abs(full).max())
+    assert err < 2e-3 * max(scale, 1.0), f"whisper decode diverges ({err})"

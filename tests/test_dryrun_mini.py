@@ -1,0 +1,80 @@
+"""Mini dry-run in a subprocess: the lower/compile path on a small fake-device
+mesh (8 devices, 4x2), reduced arch.  Proves the dry-run machinery end-to-end
+without the 512-device cost; the full 16x16 / 2x16x16 sweep is
+``python -m repro.launch.dryrun --all [--multi-pod]`` (results committed under
+benchmarks/results/dryrun/)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.launch import sharding as shd, steps
+from repro.launch.specs import batch_specs, batch_pspecs, InputShape
+
+cfg = get_config("qwen3-0.6b").reduced()
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+shape = InputShape("mini", 128, 8, "train")
+
+pshape = steps.params_shape(cfg)
+pspecs = shd.tree_pspecs(pshape, ("data",), mesh=mesh)
+opt, _ = steps.make_optimizer(cfg)
+oshape = jax.eval_shape(opt.init, pshape)
+ospecs = shd.sanitize_tree(shd.opt_state_pspecs(oshape, pshape, ("data",)),
+                           oshape, mesh)
+bshape = batch_specs(cfg, shape)
+bspecs = batch_pspecs(cfg, shape, mesh)
+ns = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t,
+                            is_leaf=lambda x: isinstance(x, P))
+with mesh:
+    fn = steps.make_train_step(cfg, opt, n_groups=4, attn_chunk=64)
+    lowered = jax.jit(fn, in_shardings=(ns(pspecs), ns(ospecs), ns(bspecs))
+                      ).lower(pshape, oshape, bshape)
+    compiled = lowered.compile()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    print(json.dumps({"ok": True, "flops": float(ca.get("flops", -1)),
+                      "devices": jax.device_count()}))
+"""
+
+
+def test_mini_dryrun_subprocess():
+    env = dict(os.environ, PYTHONPATH=SRC, JAX_PLATFORMS="cpu")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=420)
+    assert r.returncode == 0, r.stderr[-2000:]
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    assert out["ok"] and out["devices"] == 8
+    assert out["flops"] > 0
+
+
+def test_dryrun_results_exist_and_lower():
+    """The committed sweep results must show every non-skipped combo ok."""
+    d = os.path.join(os.path.dirname(__file__), "..", "benchmarks", "results",
+                     "dryrun")
+    if not os.path.isdir(d) or not os.listdir(d):
+        pytest.skip("dry-run sweep has not been run yet")
+    bad = []
+    for f in os.listdir(d):
+        if not f.endswith(".json"):
+            continue
+        with open(os.path.join(d, f)) as fh:
+            rec = json.load(fh)
+        if rec.get("status") not in ("ok", "skipped"):
+            bad.append((f, rec.get("error", "?")[:120]))
+    assert not bad, f"failed dry-runs: {bad}"

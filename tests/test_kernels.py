@@ -1,0 +1,127 @@
+"""Pallas kernel sweeps (interpret mode) vs. pure-jnp ref oracles —
+shapes x dtypes per the deliverable-(c) requirement."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.fusion_loss.kernel import fusion_loss_pallas
+from repro.kernels.fusion_loss.ref import fusion_loss_ref
+from repro.kernels.fusion_loss.ops import fused_multimodal_loss
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.ssd_scan.kernel import ssd_chunk_pallas
+from repro.kernels.ssd_scan.ref import ssd_chunk_ref
+from repro.kernels.ssd_scan.ops import ssd_forward
+from repro.models.mamba2 import ssd_chunked
+from repro.core import fusion as core_fusion
+
+RNG = np.random.default_rng(0)
+
+
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("M,T,V,bt,bv", [
+    (1, 128, 1024, 64, 256),
+    (2, 256, 2048, 128, 512),
+    (3, 64, 4096, 64, 2048),
+    (4, 128, 512, 128, 512),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fusion_loss_sweep(M, T, V, bt, bv, dtype):
+    logits = jnp.asarray(RNG.normal(size=(M, T, V)) * 3, dtype)
+    labels = jnp.asarray(RNG.integers(0, V, T), jnp.int32)
+    avail = jnp.asarray(
+        np.maximum(RNG.integers(0, 2, (M, T)),
+                   (np.arange(M)[:, None] == 0)), jnp.float32)
+    f1, m1 = fusion_loss_pallas(logits, labels, avail, block_t=bt,
+                                block_v=bv, interpret=True)
+    f2, m2 = fusion_loss_ref(logits, labels, avail)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(f1), np.asarray(f2),
+                               rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(m1), np.asarray(m2),
+                               rtol=tol, atol=tol)
+
+
+def test_fusion_loss_ops_matches_core_fusion():
+    """Kernel front-end agrees with core.fusion.multimodal_loss totals."""
+    B, S, V = 2, 8, 512
+    lg = {"text": jnp.asarray(RNG.normal(size=(B, S, V)), jnp.float32),
+          "vision": jnp.asarray(RNG.normal(size=(B, 1, V)), jnp.float32)}
+    y = jnp.asarray(RNG.integers(0, V, (B, S)), jnp.int32)
+    total_k, met_k = fused_multimodal_loss(lg, y, block_t=16, block_v=512,
+                                           interpret=True)
+    total_c, met_c = core_fusion.multimodal_loss(lg, y)
+    np.testing.assert_allclose(float(total_k), float(total_c), rtol=1e-5)
+    np.testing.assert_allclose(float(met_k["F"]), float(met_c["F"]),
+                               rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("B,H,K,S,hd,win,bq,bk", [
+    (1, 4, 2, 128, 64, None, 64, 64),
+    (2, 4, 4, 256, 32, None, 128, 64),
+    (1, 8, 2, 256, 64, 64, 64, 64),
+    (1, 2, 1, 512, 128, 128, 128, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, H, K, S, hd, win, bq, bk, dtype):
+    q = jnp.asarray(RNG.normal(size=(B, H, S, hd)), dtype)
+    k = jnp.asarray(RNG.normal(size=(B, K, S, hd)), dtype)
+    v = jnp.asarray(RNG.normal(size=(B, K, S, hd)), dtype)
+    o1 = flash_attention_pallas(q, k, v, causal=True, window=win,
+                                block_q=bq, block_k=bk, interpret=True)
+    o2 = attention_ref(q, k, v, causal=True, window=win)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(o1, np.float32),
+                               np.asarray(o2, np.float32), rtol=tol, atol=tol)
+
+
+def test_flash_attention_ops_layout():
+    """[B,S,H,hd] wrapper layout equals models.layers.chunked_attention."""
+    from repro.models.layers import chunked_attention
+    B, S, H, K, hd = 2, 128, 4, 2, 32
+    q = jnp.asarray(RNG.normal(size=(B, S, H, hd)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(B, S, K, hd)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(B, S, K, hd)), jnp.float32)
+    o1 = flash_attention(q, k, v, causal=True, interpret=True,
+                         block_q=64, block_k=64)
+    o2 = chunked_attention(q, k, v, window=None, chunk=64)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("B,nc,Q,nh,hp,N", [
+    (1, 2, 64, 2, 32, 16),
+    (2, 4, 32, 4, 16, 8),
+    (1, 1, 128, 8, 64, 32),
+])
+def test_ssd_chunk_sweep(B, nc, Q, nh, hp, N):
+    x = jnp.asarray(RNG.normal(size=(B, nc, Q, nh, hp)), jnp.float32)
+    cum = jnp.cumsum(jnp.asarray(
+        -np.abs(RNG.normal(size=(B, nc, Q, nh)) * 0.1), jnp.float32), axis=2)
+    Bm = jnp.asarray(RNG.normal(size=(B, nc, Q, N)), jnp.float32)
+    Cm = jnp.asarray(RNG.normal(size=(B, nc, Q, N)), jnp.float32)
+    y1, s1 = ssd_chunk_pallas(x, cum, Bm, Cm, interpret=True)
+    y2, s2 = ssd_chunk_ref(x, cum, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("S,chunk", [(64, 16), (128, 32), (96, 96)])
+def test_ssd_forward_matches_model_path(S, chunk):
+    B, nh, hp, N = 2, 4, 16, 8
+    x = jnp.asarray(RNG.normal(size=(B, S, nh, hp)), jnp.float32)
+    dt = jnp.asarray(np.abs(RNG.normal(size=(B, S, nh))) * 0.1 + 0.01,
+                     jnp.float32)
+    A = jnp.asarray(-np.abs(RNG.normal(size=nh)) - 0.1, jnp.float32)
+    Bm = jnp.asarray(RNG.normal(size=(B, S, N)), jnp.float32)
+    Cm = jnp.asarray(RNG.normal(size=(B, S, N)), jnp.float32)
+    o1 = ssd_forward(x, dt, A, Bm, Cm, chunk, interpret=True)
+    o2 = ssd_chunked(x, dt, A, Bm, Cm, chunk)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=1e-4, atol=1e-4)

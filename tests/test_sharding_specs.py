@@ -1,0 +1,98 @@
+"""Sharding rules + input specs + HLO collective parser unit tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS
+from repro.launch import hlo_analysis, specs
+from repro.launch.sharding import param_pspec, tree_pspecs, sanitize_pspec
+
+
+class _FakeMesh:
+    shape = {"data": 16, "model": 16}
+
+
+def test_param_rules():
+    f = ("data",)
+    assert param_pspec("blocks/l0/mixer/wq/w", 3, f) == P(None, "data", "model")
+    assert param_pspec("blocks/l0/mixer/wo/w", 3, f) == P(None, "model", "data")
+    assert param_pspec("blocks/l0/ffn/wg", 4, f) == P(None, "model", "data", None)
+    assert param_pspec("blocks/l0/ffn/wg/w", 3, f) == P(None, "data", "model")
+    assert param_pspec("embed", 2, f) == P("model", "data")
+    assert param_pspec("lm_head", 2, f) == P("data", "model")
+    assert param_pspec("blocks/l0/norm1", 2, f) == P(None, None)
+    assert param_pspec("blocks/l3/mixer/wx", 3, f) == P(None, "data", "model")
+
+
+def test_sanitize_drops_nondivisible():
+    m = _FakeMesh()
+    assert sanitize_pspec(P("model", "data"), (50280, 1024), m) == \
+        P(None, "data")
+    assert sanitize_pspec(P(None, "model"), (512, 51865), m) == P(None, None)
+    assert sanitize_pspec(P("model", None), (256, 7), m) == P("model", None)
+
+
+def test_input_shape_table():
+    s = specs.INPUT_SHAPES
+    assert s["train_4k"].seq_len == 4096 and s["train_4k"].global_batch == 256
+    assert s["prefill_32k"].global_batch == 32
+    assert s["decode_32k"].global_batch == 128
+    assert s["long_500k"].seq_len == 524288 and s["long_500k"].global_batch == 1
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_batch_specs_complete(name):
+    cfg = ARCHS[name]
+    for sh in specs.INPUT_SHAPES.values():
+        ok, _ = specs.supports(cfg, sh)
+        if not ok:
+            continue
+        b = specs.batch_specs(cfg, sh)
+        if sh.kind == "decode":
+            assert set(b) == {"token", "index"}
+            assert b["token"].shape == (sh.global_batch, 1)
+        else:
+            assert b["tokens"].shape == (sh.global_batch, sh.seq_len)
+            if cfg.arch_type == "vlm":
+                assert "patches" in b
+            if cfg.arch_type == "audio":
+                assert "src_embeds" in b
+
+
+def test_long_500k_skip_list():
+    skipped = [n for n, c in ARCHS.items()
+               if not specs.supports(c, specs.INPUT_SHAPES["long_500k"])[0]]
+    assert set(skipped) == {"kimi-k2-1t-a32b", "llama4-scout-17b-a16e",
+                            "llava-next-34b", "qwen2-72b", "qwen3-0.6b",
+                            "qwen3-4b", "whisper-base"}
+
+
+# ---------------------------------------------------------------------------
+HLO_SAMPLE = """
+ENTRY %main (p0: bf16[16,128]) -> bf16[16,128] {
+  %ar = bf16[16,128]{1,0} all-reduce(bf16[16,128]{1,0} %p0), replica_groups={{0,1,2,3}}
+  ROOT %t = bf16[16,128]{1,0} copy(%ar)
+}
+%while_body_1 (p: s32[]) -> s32[] {
+  %ag = f32[64,256]{1,0} all-gather(f32[4,256]{1,0} %x), replica_groups=[16,16]<=[256], dimensions={0}
+  %a2a = bf16[8,64]{1,0} all-to-all(bf16[8,64]{1,0} %y), replica_groups={{0,1},{2,3}}
+}
+"""
+
+
+def test_hlo_collective_parse():
+    ops = hlo_analysis.parse_collectives(HLO_SAMPLE, loop_multiplier=12)
+    kinds = sorted(o.kind for o in ops)
+    assert kinds == ["all-gather", "all-reduce", "all-to-all"]
+    ar = next(o for o in ops if o.kind == "all-reduce")
+    assert ar.operand_bytes == 16 * 128 * 2
+    assert ar.multiplier == 1
+    ag = next(o for o in ops if o.kind == "all-gather")
+    assert ag.group_size == 16
+    assert ag.operand_bytes == 64 * 256 * 4 // 16
+    assert ag.multiplier == 12                     # inside while body
+    summ = hlo_analysis.summarize(ops)
+    assert summ["total_operand_bytes"] > 0
+    assert summ["op_counts"]["all-gather"] == 12

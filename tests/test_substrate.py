@@ -1,0 +1,144 @@
+"""Optimizers / checkpointing / data pipeline / paper models."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import optim
+from repro.checkpoint import save_checkpoint, load_checkpoint
+from repro.data import synthetic
+from repro.data.partition import partition, train_test_split
+from repro.models import paper_models as pm
+
+
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", ["sgd", "momentum", "adam", "adamw",
+                                  "adafactor"])
+def test_optimizer_descends_quadratic(name):
+    opt = optim.OPTIMIZERS[name](0.1)
+    params = {"w": jnp.asarray([3.0, -2.0]), "b": jnp.asarray(1.5)}
+    state = opt.init(params)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2) + p["b"] ** 2
+
+    l0 = float(loss(params))
+    for _ in range(50):
+        g = jax.grad(loss)(params)
+        upd, state = opt.update(g, state, params)
+        params = optim.apply_updates(params, upd)
+    assert float(loss(params)) < 0.1 * l0
+
+
+def test_adafactor_state_is_factored():
+    opt = optim.adafactor(0.01)
+    params = {"w": jnp.zeros((64, 32)), "v": jnp.zeros((16,))}
+    st_ = opt.init(params)
+    assert st_["f"]["w"]["r"].shape == (64,)
+    assert st_["f"]["w"]["c"].shape == (32,)
+    assert st_["f"]["v"]["v"].shape == (16,)
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.asarray([3.0, 4.0])}
+    clipped, norm = optim.clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(5.0)
+    assert float(optim.global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_warmup_cosine_schedule():
+    lr = optim.warmup_cosine(1.0, 10, 100)
+    assert float(lr(0)) == 0.0
+    assert float(lr(10)) == pytest.approx(1.0)
+    assert float(lr(99)) < 0.2
+
+
+# ---------------------------------------------------------------------------
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": {"b": np.arange(6, dtype=np.float32).reshape(2, 3)},
+            "c": np.asarray(7, np.int32)}
+    save_checkpoint(str(tmp_path), tree, step=3, metadata={"note": "x"})
+    loaded, manifest = load_checkpoint(str(tmp_path))
+    assert manifest["step"] == 3
+    np.testing.assert_array_equal(loaded["a"]["b"], tree["a"]["b"])
+    np.testing.assert_array_equal(loaded["c"], tree["c"])
+
+
+# ---------------------------------------------------------------------------
+@settings(max_examples=10, deadline=None)
+@given(st.integers(4, 12), st.sampled_from([0.2, 0.3, 0.4]),
+       st.integers(0, 2 ** 31 - 1))
+def test_property_partition_modality_heterogeneity(K, omega, seed):
+    ds = synthetic.crema_like(seed=seed % 1000, n=120)
+    clients = partition(ds, K, omega, seed=seed % 1000)
+    assert len(clients) == K
+    total = sum(c.size for c in clients)
+    assert total == len(ds)
+    n_missing_audio = sum("audio" not in c.modalities for c in clients)
+    n_missing_image = sum("image" not in c.modalities for c in clients)
+    assert n_missing_audio == int(np.floor(omega * K))
+    assert n_missing_image == int(np.floor(omega * K))
+    for c in clients:
+        assert len(c.modalities) >= 1              # nobody loses everything
+        for m in c.modalities:
+            assert len(c.dataset.features[m]) == c.size
+
+
+def test_train_test_split_disjoint():
+    ds = synthetic.iemocap_like(seed=0, n=100)
+    tr, te = train_test_split(ds, 0.2, seed=0)
+    assert len(tr) == 80 and len(te) == 20
+
+
+# ---------------------------------------------------------------------------
+def test_paper_models_shapes():
+    k = jax.random.key(0)
+    crema = pm.init_crema_model(k)
+    audio = jnp.zeros((4, 32, 11))
+    image = jnp.zeros((4, 48, 48, 3))
+    out = pm.modal_logits(crema, {"audio": audio, "image": image})
+    assert out["audio"].shape == (4, 6)
+    assert out["image"].shape == (4, 6)
+    iemo = pm.init_iemocap_model(k)
+    text = jnp.zeros((4, 24, 100))
+    out = pm.modal_logits(iemo, {"audio": audio, "text": text})
+    assert out["text"].shape == (4, 10)
+
+
+def test_paper_model_learns_synthetic_audio():
+    """The audio LSTM must fit the synthetic CREMA-like audio quickly —
+    this is the fast-converging modality of §VI-B."""
+    ds = synthetic.crema_like(seed=0, n=200)
+    k = jax.random.key(0)
+    params = pm.init_lstm_model(k, 11, 50, 6)
+    x = jnp.asarray(ds.features["audio"])
+    y = jnp.asarray(ds.labels)
+
+    @jax.jit
+    def step(p):
+        def loss(p):
+            lg = pm.lstm_apply(p, x)
+            lse = jax.nn.logsumexp(lg, -1)
+            gold = jnp.take_along_axis(lg, y[:, None], -1)[:, 0]
+            return (lse - gold).mean()
+        l, g = jax.value_and_grad(loss)(p)
+        return jax.tree.map(lambda a, b: a - 0.3 * b, p, g), l
+
+    for i in range(40):
+        params, l = step(params)
+    acc = float((jnp.argmax(pm.lstm_apply(params, x), -1) == y).mean())
+    assert acc > 0.5, f"audio LSTM failed to learn ({acc})"
+
+
+def test_param_bits_matches_table2_order():
+    """Our LSTM/CNN sizes should be the same order as the paper's l_m
+    (562400 / 557056 bits at fp32)."""
+    k = jax.random.key(0)
+    crema = pm.init_crema_model(k)
+    audio_bits = pm.param_bits(crema["audio"])
+    image_bits = pm.param_bits(crema["image"])
+    assert 1e5 < audio_bits < 5e6
+    assert 1e5 < image_bits < 5e6

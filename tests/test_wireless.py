@@ -1,0 +1,157 @@
+"""Channel / cost / Lyapunov / immune-algorithm / scheduler tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.convergence import BoundState
+from repro.core.aggregation import unified_weights
+from repro.wireless import cost as wcost
+from repro.wireless.channel import Channel, rate_ceiling, uplink_rate
+from repro.wireless.immune import immune_search
+from repro.wireless.lyapunov import EnergyQueues
+from repro.wireless.params import MODALITY_PROFILES, WirelessParams
+from repro.wireless.schedulers import (ScheduleContext, make_scheduler)
+
+P = WirelessParams()
+
+
+# ---------------------------------------------------------------------------
+def test_rate_monotone_in_bandwidth():
+    h = np.array([1e-5])
+    B = np.linspace(1e5, 1e7, 50)
+    r = uplink_rate(B, np.repeat(h, 50), P)
+    assert np.all(np.diff(r) > 0)
+    assert r[-1] < rate_ceiling(h, P)[0]
+
+
+def test_channel_draw_positive_and_fading():
+    ch = Channel(P, np.random.default_rng(0))
+    h1, h2 = ch.draw(), ch.draw()
+    assert np.all(h1 > 0) and np.all(h2 > 0)
+    assert not np.allclose(h1, h2)          # small-scale fading varies
+
+
+def test_cost_model_eq17_eq18():
+    prof = MODALITY_PROFILES["crema_d"]
+    cc = wcost.client_costs([100], [("audio", "image")], prof, P)
+    phi = (2000 + P.beta0) + (8000 + P.beta0) - P.beta0
+    assert cc.tau_cmp[0] == pytest.approx(100 * phi / P.f_cpu)
+    assert cc.e_cmp[0] == pytest.approx(P.alpha * 100 * P.f_cpu ** 2 * phi)
+    assert cc.gamma_bits[0] == 562400 + 557056
+
+
+def test_energy_queue_dynamics():
+    q = EnergyQueues(2)
+    # spend more than E_add -> queue grows
+    q.step(np.array([1.0, 0.0]), np.array([0.02, 0.0]), np.array([0.0, 0.0]),
+           P.E_add)
+    assert q.Q[0] == pytest.approx(0.01)
+    assert q.Q[1] == 0.0
+    # idle round replenishes
+    q.step(np.zeros(2), np.zeros(2), np.zeros(2), P.E_add)
+    assert q.Q[0] == pytest.approx(0.0)
+
+
+# ---------------------------------------------------------------------------
+def test_immune_beats_random_search_same_budget():
+    rng = np.random.default_rng(0)
+    K = 12
+    w = rng.normal(size=K)
+
+    def f(a):             # non-trivial quadratic with infeasible region
+        a = np.asarray(a, float)
+        if a.sum() > 6:
+            return np.inf
+        return float((w * a).sum() ** 2 - 2 * (w * a).sum())
+
+    a_star, J_star = immune_search(f, K, np.random.default_rng(1))
+    budget = 20 * 10 * 2
+    rand = min(f(np.random.default_rng(2).integers(0, 2, K).astype(bool))
+               for _ in range(budget))
+    assert J_star <= rand + 1e-12
+
+
+def test_immune_all_infeasible_returns_empty():
+    a, J = immune_search(lambda a: np.inf if np.asarray(a).sum() else 0.0,
+                         6, np.random.default_rng(0))
+    assert a.sum() == 0
+
+
+# ---------------------------------------------------------------------------
+def _ctx(rng, K=6, dataset="crema_d"):
+    prof = MODALITY_PROFILES[dataset]
+    mods = [("audio", "image"), ("audio",), ("image",)] * (K // 3)
+    sizes = [50] * K
+    cc = wcost.client_costs(sizes, mods, prof, P)
+    ch = Channel(WirelessParams(K=K), rng)
+    w_bar = unified_weights(sizes, mods, ["audio", "image"])
+    bound = BoundState(K, ["audio", "image"], mods, w_bar, sizes)
+    return ScheduleContext(h=ch.draw(), Q=np.zeros(K), cost=cc,
+                           params=WirelessParams(K=K), bound=bound,
+                           round_idx=0, model_dist=np.zeros(K),
+                           client_modalities=mods)
+
+
+@pytest.mark.parametrize("name", ["random", "round_robin", "selection",
+                                  "dropout", "jcsba"])
+def test_scheduler_returns_valid_decision(name):
+    rng = np.random.default_rng(0)
+    ctx = _ctx(rng)
+    sched = make_scheduler(name, rng)
+    dec = sched.schedule(ctx)
+    K = len(ctx.h)
+    assert dec.a.shape == (K,) and dec.a.dtype == bool
+    assert dec.B.shape == (K,)
+    assert np.all(dec.B >= 0)
+    assert dec.B.sum() <= ctx.params.B_max * (1 + 1e-6)
+    assert np.all(dec.B[~dec.a] == 0)
+
+
+def test_jcsba_bandwidth_respects_latency():
+    rng = np.random.default_rng(1)
+    ctx = _ctx(rng)
+    dec = make_scheduler("jcsba", rng).schedule(ctx)
+    part = np.flatnonzero(dec.a)
+    if len(part):
+        tcom = wcost.com_latency(dec.B[part], ctx.h[part],
+                                 ctx.cost.gamma_bits[part], ctx.params)
+        assert np.all(tcom + ctx.cost.tau_cmp[part]
+                      <= ctx.params.tau_max * (1 + 1e-3))
+
+
+def test_round_robin_cycles():
+    rng = np.random.default_rng(0)
+    sched = make_scheduler("round_robin", rng, n_sched=2)
+    ctx = _ctx(rng)
+    seen = set()
+    for _ in range(3):
+        dec = sched.schedule(ctx)
+        seen.update(np.flatnonzero(dec.a).tolist())
+    assert seen == set(range(6))
+
+
+# ---------------------------------------------------------------------------
+def test_bound_state_theorem1_limits():
+    rng = np.random.default_rng(0)
+    ctx = _ctx(rng)
+    bs = ctx.bound
+    K = 6
+    # full participation -> A1 = A2 = 0 ("all clients participation makes the
+    # whole term equal 0" — remark under Theorem 1)
+    A1, A2 = bs.a1_a2(np.ones(K))
+    assert A1 == 0.0 and A2 == pytest.approx(0.0, abs=1e-12)
+    # empty participation -> A1 = sum of zeta^2, A2 = 0
+    A1, A2 = bs.a1_a2(np.zeros(K))
+    assert A1 == pytest.approx(sum(z ** 2 for z in bs.zeta.values()))
+    assert A2 == 0.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_property_bound_nonnegative(seed):
+    rng = np.random.default_rng(seed)
+    ctx = _ctx(rng)
+    a = rng.integers(0, 2, 6).astype(float)
+    A1, A2 = ctx.bound.a1_a2(a)
+    assert A1 >= 0 and A2 >= 0
+    assert ctx.bound.bound_term(a) >= 0
