@@ -1,0 +1,101 @@
+"""Round-engine throughput: sequential Python loop vs batched vmap.
+
+Runs the full MFL round (scheduling + local updates + Eq. 12 aggregation +
+trackers) with every client scheduled each round — the local-update fan-out
+dominates, which is exactly the hot path the batched engine replaces.  The
+latency budget is set non-binding so no scheduled client fails transmission
+(the two paths then do identical algorithmic work on identical cohorts).
+
+Default is the *cross-device* regime (the ROADMAP's millions-of-users
+direction): per-client shards of ~2 samples, so the sequential path is
+dominated by its K-per-round JAX re-entries while the batched path pays one.
+``--samples-per-client`` moves toward the compute-bound cross-silo regime,
+where both paths converge on raw FLOPs and the speedup shrinks — recorded
+honestly either way.
+
+  PYTHONPATH=src python -m benchmarks.batched_rounds                 # K=10/50/200
+  PYTHONPATH=src python -m benchmarks.batched_rounds --tiny          # K=4, CI smoke
+  PYTHONPATH=src python -m benchmarks.batched_rounds --json-out BENCH_batched_rounds.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import List, Optional
+
+
+def _make_experiment(dataset: str, K: int, n_samples: int, batched: bool,
+                     seed: int = 0):
+    from repro.fl.runtime import MFLExperiment
+    from repro.wireless.params import WirelessParams
+    params = WirelessParams(K=K, tau_max=1e6)     # latency never binds
+    return MFLExperiment(dataset=dataset, scheduler="random", K=K,
+                         n_samples=n_samples, seed=seed, eval_every=10 ** 9,
+                         params=params, scheduler_kwargs={"n_sched": K},
+                         batched=batched)
+
+
+def _rounds_per_sec(dataset: str, K: int, rounds: int, n_samples: int,
+                    batched: bool) -> float:
+    exp = _make_experiment(dataset, K, n_samples, batched)
+    exp.run_round()                               # warmup: compile + stack
+    t0 = time.perf_counter()
+    exp.run(rounds)
+    dt = time.perf_counter() - t0
+    assert all(len(r.participants) == K for r in exp.history), \
+        "benchmark invalid: a scheduled client failed transmission"
+    return rounds / dt
+
+
+def run_benchmark(Ks: List[int], rounds: int = 5,
+                  samples_per_client: float = 2.0,
+                  datasets: Optional[List[str]] = None) -> dict:
+    datasets = datasets or ["iemocap", "crema_d"]
+    results = []
+    for dataset in datasets:
+        for K in Ks:
+            # 0.8 = train fraction; keep every client shard non-empty
+            n = max(int(samples_per_client * K / 0.8), int(K / 0.8) + K)
+            seq = _rounds_per_sec(dataset, K, rounds, n, batched=False)
+            bat = _rounds_per_sec(dataset, K, rounds, n, batched=True)
+            row = {"dataset": dataset, "K": K, "rounds": rounds,
+                   "n_samples": n,
+                   "seq_rounds_per_sec": round(seq, 4),
+                   "batched_rounds_per_sec": round(bat, 4),
+                   "speedup": round(bat / seq, 2)}
+            results.append(row)
+            print(f"{dataset:8s} K={K:4d} n={n:5d}  seq={seq:8.3f} r/s  "
+                  f"batched={bat:8.3f} r/s  speedup={bat / seq:6.2f}x",
+                  flush=True)
+    return {"benchmark": "batched_rounds",
+            "unit": "rounds_per_sec",
+            "regime": f"cross-device, ~{samples_per_client} samples/client, "
+                      "all K scheduled, tau_max non-binding",
+            "results": results}
+
+
+def main(argv: Optional[List[str]] = None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: K=4, 2 rounds, both paths")
+    ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--samples-per-client", type=float, default=2.0)
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args(argv)
+    if args.tiny:
+        out = run_benchmark([4], rounds=args.rounds or 2,
+                            samples_per_client=args.samples_per_client,
+                            datasets=["iemocap"])
+    else:
+        out = run_benchmark([10, 50, 200], rounds=args.rounds or 5,
+                            samples_per_client=args.samples_per_client)
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(out, f, indent=2)
+        print(f"wrote {args.json_out}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -14,6 +14,10 @@ Benchmarks:
   bound_descent       — Theorem-2 bound vs measured loss descent
   kernel_*            — Pallas kernel oracles (interpret) + XLA-path timing
   roofline_rows       — #(arch x shape) rows with all three terms present
+  batched_rounds_*    — round engine throughput, sequential vs batched vmap
+                        (``--tiny`` shrinks it to the CI smoke config: K=4,
+                        2 rounds, both paths; ``--json-out`` dumps all rows
+                        plus the raw benchmark payloads as JSON)
 """
 from __future__ import annotations
 
@@ -26,6 +30,8 @@ import time
 import numpy as np
 
 ROWS = []
+PAYLOADS = {}          # raw per-benchmark result dicts, for --json-out
+TINY = False
 
 
 def emit(name: str, us_per_call: float, derived: str = ""):
@@ -179,12 +185,35 @@ def bench_roofline(quick: bool):
          ";".join(f"{k}={v}" for k, v in sorted(by_dom.items())))
 
 
+def bench_batched_rounds(quick: bool):
+    from benchmarks.batched_rounds import run_benchmark
+    if TINY:
+        out = run_benchmark([4], rounds=2, datasets=["iemocap"])
+    elif quick:
+        out = run_benchmark([10, 50], rounds=3, datasets=["iemocap"])
+    else:
+        out = run_benchmark([10, 50, 200], rounds=5)
+    PAYLOADS["batched_rounds"] = out
+    for r in out["results"]:
+        emit(f"batched_rounds_{r['dataset']}_K={r['K']}",
+             1e6 / r["batched_rounds_per_sec"],
+             f"seq_rps={r['seq_rounds_per_sec']};"
+             f"batched_rps={r['batched_rounds_per_sec']};"
+             f"speedup={r['speedup']}x")
+
+
 # ---------------------------------------------------------------------------
 def main() -> None:
+    global TINY
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke mode (shrinks supporting benches)")
+    ap.add_argument("--json-out", default=None,
+                    help="dump emitted rows + raw payloads as JSON")
     args, _ = ap.parse_known_args()
+    TINY = args.tiny
     quick = not args.full
     benches = {
         "table3": bench_table3,
@@ -193,6 +222,7 @@ def main() -> None:
         "bound": bench_bound,
         "kernels": bench_kernels,
         "roofline": bench_roofline,
+        "batched_rounds": bench_batched_rounds,
     }
     print("name,us_per_call,derived")
     for name, fn in benches.items():
@@ -202,6 +232,13 @@ def main() -> None:
             fn(quick)
         except Exception as e:  # keep the harness running
             emit(f"{name}_ERROR", 0.0, f"{type(e).__name__}:{e}")
+    if args.json_out:
+        payload = {"rows": [{"name": n, "us_per_call": u, "derived": d}
+                            for n, u, d in ROWS],
+                   "payloads": PAYLOADS}
+        with open(args.json_out, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {args.json_out}", flush=True)
 
 
 if __name__ == "__main__":

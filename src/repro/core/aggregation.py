@@ -17,18 +17,28 @@ import jax.numpy as jnp
 import numpy as np
 
 
+def stacked_weights(data_sizes: Sequence[int],
+                    upload_mask: Mapping[str, np.ndarray]
+                    ) -> Dict[str, np.ndarray]:
+    """Eq. 12 weights from a contributor mask: ``upload_mask[m]`` is a bool
+    [K] marking the clients contributing to submodel m.  Every other weight
+    helper is a specific mask construction over this normalization."""
+    D = np.asarray(data_sizes, np.float64)
+    out = {}
+    for m, mask in upload_mask.items():
+        w = np.where(np.asarray(mask, bool), D, 0.0)
+        tot = w.sum()
+        out[m] = w / tot if tot > 0 else w
+    return out
+
+
 def unified_weights(data_sizes: Sequence[int],
                     modalities: Sequence[Sequence[str]],
                     all_modalities: Sequence[str]) -> Dict[str, np.ndarray]:
     """w̄_{k,m} over the full population K_m (Eq. 9)."""
-    D = np.asarray(data_sizes, np.float64)
-    out = {}
-    for m in all_modalities:
-        has = np.array([m in mods for mods in modalities])
-        w = np.where(has, D, 0.0)
-        tot = w.sum()
-        out[m] = w / tot if tot > 0 else w
-    return out
+    return stacked_weights(data_sizes, {
+        m: np.array([m in mods for mods in modalities])
+        for m in all_modalities})
 
 
 def participated_weights(data_sizes: Sequence[int],
@@ -36,16 +46,11 @@ def participated_weights(data_sizes: Sequence[int],
                          participants: Sequence[int],
                          all_modalities: Sequence[str]) -> Dict[str, np.ndarray]:
     """w^t_{k,m} over K_m^t (Eq. 12); zero row if K_m^t is empty."""
-    D = np.asarray(data_sizes, np.float64)
     part = np.zeros(len(data_sizes), bool)
     part[list(participants)] = True
-    out = {}
-    for m in all_modalities:
-        has = np.array([m in mods for mods in modalities]) & part
-        w = np.where(has, D, 0.0)
-        tot = w.sum()
-        out[m] = w / tot if tot > 0 else w
-    return out
+    return stacked_weights(data_sizes, {
+        m: np.array([m in mods for mods in modalities]) & part
+        for m in all_modalities})
 
 
 def weights_from_uploads(data_sizes: Sequence[int],
@@ -55,13 +60,44 @@ def weights_from_uploads(data_sizes: Sequence[int],
     under modality dropout [28] a client's upload may miss a modality it
     owns; renormalising over real contributors keeps Eq. 12 a convex
     combination (tested in test_aggregation.py)."""
-    D = np.asarray(data_sizes, np.float64)
-    out = {}
-    for m in all_modalities:
-        has = np.array([cp is not None and m in cp for cp in client_params])
-        w = np.where(has, D, 0.0)
-        tot = w.sum()
-        out[m] = w / tot if tot > 0 else w
+    return stacked_weights(data_sizes, {
+        m: np.array([cp is not None and m in cp for cp in client_params])
+        for m in all_modalities})
+
+
+def aggregate_stacked(global_params: Mapping[str, object],
+                      stacked_params: Mapping[str, object],
+                      weights: Mapping[str, np.ndarray]) -> Dict[str, object]:
+    """θ^t_{g,m} = Σ_k w^t_{k,m} θ^t_{k,m} over a *stacked* pytree whose
+    leaves carry a leading client axis [K, ...] (the batched round engine's
+    layout) — one weighted contraction per leaf instead of a Python loop
+    over clients.  Zero-weight rows (non-participants, masked modalities)
+    drop out of the contraction; if Σ_k w_{k,m} == 0 the global submodel m
+    is returned unchanged, as in ``aggregate``."""
+    new_global: Dict[str, object] = {}
+    for m, g_sub in global_params.items():
+        w = weights[m]
+        if m not in stacked_params or w.sum() <= 0:
+            new_global[m] = g_sub
+            continue
+        wj = jnp.asarray(w, jnp.float32)
+        new_global[m] = jax.tree.map(
+            lambda x: jnp.tensordot(wj, x, axes=1), stacked_params[m])
+    return new_global
+
+
+def aggregate_gradients_stacked(stacked_grads: Mapping[str, object],
+                                weights: Mapping[str, np.ndarray]
+                                ) -> Dict[str, object]:
+    """Stacked twin of ``aggregate_gradients``: weighted contraction of
+    [K, ...] gradient leaves; modalities with no contributor are omitted."""
+    out: Dict[str, object] = {}
+    for m, g in stacked_grads.items():
+        w = weights[m]
+        if w.sum() <= 0:
+            continue
+        wj = jnp.asarray(w, jnp.float32)
+        out[m] = jax.tree.map(lambda x: jnp.tensordot(wj, x, axes=1), g)
     return out
 
 

@@ -84,6 +84,35 @@ class BoundState:
                                             + (1 - self.staleness) * mean_d)
 
     # ------------------------------------------------------------------
+    def update_stacked(self, stacked_grads: Mapping[str, object],
+                       upload_mask: Mapping[str, np.ndarray],
+                       agg_grads: Mapping[str, object]) -> None:
+        """Vectorized twin of ``update`` for the batched round engine:
+        ``stacked_grads[m]`` carries a leading client axis [K, ...] and
+        ``upload_mask[m]`` (bool [K]) marks which rows are real uploads —
+        masked-out rows hold exact zeros and are ignored.  Produces the same
+        ζ/δ values as the sequential path."""
+        for m in self.mods:
+            if m not in agg_grads:
+                continue
+            mask = np.asarray(upload_mask[m], bool)
+            seen = np.flatnonzero(mask)
+            if not seen.size:
+                continue
+            self.zeta[m] = _tree_norm(agg_grads[m])
+            # per-client norms on device: only the [K] result crosses the
+            # host boundary, not the K-times-model-size gradient stack
+            sq = sum(jnp.square(gs - ga[None]).reshape(self.K, -1).sum(axis=1)
+                     for gs, ga in zip(jax.tree.leaves(stacked_grads[m]),
+                                       jax.tree.leaves(agg_grads[m])))
+            norms = np.asarray(jnp.sqrt(sq))
+            self.delta[m][seen] = norms[seen]
+            mean_d = float(norms[seen].mean())
+            stale = np.array([m in cm for cm in self.client_mods]) & ~mask
+            self.delta[m][stale] = (self.staleness * self.delta[m][stale]
+                                    + (1 - self.staleness) * mean_d)
+
+    # ------------------------------------------------------------------
     def a1_a2(self, a: np.ndarray) -> tuple:
         """A₁, A₂ of Theorem 1 for participation vector a ∈ {0,1}^K."""
         a = np.asarray(a, np.float64)

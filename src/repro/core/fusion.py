@@ -20,12 +20,23 @@ import jax
 import jax.numpy as jnp
 
 
-def softmax_xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
-    """Mean cross-entropy, fp32. logits [..., C]; labels [...] int."""
+def softmax_xent(logits: jax.Array, labels: jax.Array,
+                 sample_mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean cross-entropy, fp32. logits [..., C]; labels [...] int.
+
+    ``sample_mask`` (0/1, broadcastable to ``labels``) restricts the mean to
+    real samples — padded rows of a stacked client batch contribute nothing,
+    so the masked mean over n real samples equals the plain mean over an
+    unpadded [n] batch (the batched-round-engine equivalence invariant).
+    """
     lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
     gold = jnp.take_along_axis(logits.astype(jnp.float32),
                                labels[..., None], axis=-1)[..., 0]
-    return (lse - gold).mean()
+    ce = lse - gold
+    if sample_mask is None:
+        return ce.mean()
+    w = jnp.broadcast_to(jnp.asarray(sample_mask, jnp.float32), ce.shape)
+    return (ce * w).sum() / jnp.maximum(w.sum(), 1e-9)
 
 
 def fuse_logits(modal_logits: Mapping[str, jax.Array],
@@ -50,25 +61,31 @@ def fuse_logits(modal_logits: Mapping[str, jax.Array],
 def multimodal_loss(modal_logits: Mapping[str, jax.Array],
                     labels: jax.Array,
                     v_weights: Optional[Mapping[str, float]] = None,
-                    avail: Optional[Mapping[str, jax.Array]] = None):
+                    avail: Optional[Mapping[str, jax.Array]] = None,
+                    sample_mask: Optional[jax.Array] = None):
     """H_k = F_k + G_k (Eqs. 1-4).
+
+    ``avail[m]`` zeroes out a modality the client lacks (or dropped), and
+    ``sample_mask`` zeroes out padded samples — together they let one jitted
+    computation over a dense [K, N, ...] stack reproduce the per-client
+    ragged losses exactly (see fl/runtime.py).
 
     Returns (total, metrics) where metrics holds F, each unimodal G_m, and the
     fused logits for accuracy computation.
     """
     fused = fuse_logits(modal_logits, avail)
-    F = softmax_xent(fused, labels)
+    F = softmax_xent(fused, labels, sample_mask)
     G = jnp.zeros((), jnp.float32)
     metrics: Dict[str, jax.Array] = {"F": F}
     for m, lg in modal_logits.items():
         v = 1.0 if v_weights is None else float(v_weights.get(m, 1.0))
         a = jnp.asarray(1.0 if avail is None else avail[m], jnp.float32)
         if lg.ndim == labels.ndim + 1 and lg.shape[:-1] == labels.shape:
-            g = softmax_xent(lg, labels)
+            g = softmax_xent(lg, labels, sample_mask)
         else:
             # broadcast logits (e.g. vision head [B,1,V] vs labels [B,S])
             g = softmax_xent(jnp.broadcast_to(
-                lg, labels.shape + lg.shape[-1:]), labels)
+                lg, labels.shape + lg.shape[-1:]), labels, sample_mask)
         g = v * jnp.mean(a) * g
         metrics[f"G_{m}"] = g
         G = G + g

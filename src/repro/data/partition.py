@@ -26,6 +26,66 @@ class ClientData:
         return len(self.dataset)
 
 
+@dataclasses.dataclass
+class StackedClients:
+    """Dense client-major stack of an entire cohort, for the batched round
+    engine (fl/runtime.py).
+
+    Every modality is materialised for every client at a fixed ``max_batch``
+    (the largest client shard), so one jitted ``vmap`` can sweep the whole
+    cohort without ragged shapes:
+
+    * ``features[m]`` — [K, max_batch, ...] float32, zero-padded; a client
+      that lacks modality m gets an all-zero block (masked out of the loss
+      by ``has_modality``).
+    * ``labels`` / ``sample_mask`` — [K, max_batch]; ``sample_mask[k, i]`` is
+      1.0 for the ``sizes[k]`` real samples and 0.0 for padding.
+    * ``has_modality[m]`` — bool [K], client-owns-modality mask.
+
+    Built once per cohort (experiment init) and kept device-resident.
+    """
+    features: Dict[str, np.ndarray]
+    labels: np.ndarray
+    sample_mask: np.ndarray
+    has_modality: Dict[str, np.ndarray]
+    sizes: np.ndarray
+    modalities: Tuple[str, ...]
+
+    @property
+    def K(self) -> int:
+        return len(self.sizes)
+
+    @property
+    def max_batch(self) -> int:
+        return self.labels.shape[1]
+
+
+def stack_clients(clients: Sequence[ClientData],
+                  all_modalities: Sequence[str]) -> StackedClients:
+    """Pad + stack a list of per-client shards into a StackedClients."""
+    K = len(clients)
+    N = max(c.size for c in clients)
+    labels = np.zeros((K, N), np.int32)
+    smask = np.zeros((K, N), np.float32)
+    has = {m: np.array([m in c.modalities for c in clients])
+           for m in all_modalities}
+    feats: Dict[str, np.ndarray] = {}
+    for m in all_modalities:
+        owners = np.flatnonzero(has[m])
+        assert owners.size, f"no client owns modality {m!r}"
+        shape = clients[owners[0]].dataset.features[m].shape[1:]
+        feats[m] = np.zeros((K, N) + shape, np.float32)
+    for k, c in enumerate(clients):
+        n = c.size
+        labels[k, :n] = c.dataset.labels
+        smask[k, :n] = 1.0
+        for m in c.modalities:
+            feats[m][k, :n] = c.dataset.features[m]
+    sizes = np.array([c.size for c in clients], np.int64)
+    return StackedClients(feats, labels, smask, has, sizes,
+                          tuple(all_modalities))
+
+
 def _dirichlet_shards(ds: MultimodalDataset, K: int, alpha: float,
                       rng) -> List[np.ndarray]:
     """Label-skewed shards: per-class proportions ~ Dirichlet(alpha).

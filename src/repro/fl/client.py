@@ -82,6 +82,72 @@ class PaperModelAdapter:
         return new, grads, float(total)
 
     # ------------------------------------------------------------------
+    # batched round engine: all clients' local updates in one jitted vmap
+    # ------------------------------------------------------------------
+    @functools.lru_cache(maxsize=8)
+    def _batched_update_fn(self, mods: Tuple[str, ...]):
+        v_weights = {m: self.v_weights.get(m, 1.0) for m in mods}
+        eta = self.eta
+
+        @jax.jit
+        def step(params, init_params, feats, labels, smask, avail, seeds):
+            def one(feats_k, labels_k, smask_k, avail_k, seed_k):
+                rng = jax.random.key(seed_k)
+
+                def loss(p):
+                    logits = pm.modal_logits(p, feats_k, dropout_rng=rng)
+                    total, met = fusion.multimodal_loss(
+                        logits, labels_k, v_weights, avail=avail_k,
+                        sample_mask=smask_k)
+                    return total, met["F"]
+
+                (total, _), grads = jax.value_and_grad(
+                    loss, has_aux=True)(params)
+                new = jax.tree.map(lambda p, g: p - eta * g, params, grads)
+                dist_sq = {
+                    m: sum(jnp.vdot(n_ - i_, n_ - i_).real
+                           for n_, i_ in zip(jax.tree.leaves(new[m]),
+                                             jax.tree.leaves(init_params[m])))
+                    for m in mods}
+                return new, grads, total, dist_sq
+
+            ax0 = {m: 0 for m in mods}
+            return jax.vmap(one, in_axes=(ax0, 0, 0, ax0, 0))(
+                feats, labels, smask, avail, seeds)
+
+        return step
+
+    def batched_local_update(self, global_params: Mapping[str, dict],
+                             init_params: Mapping[str, dict],
+                             feats: Mapping[str, jax.Array],
+                             labels: jax.Array, sample_mask: jax.Array,
+                             avail: Mapping[str, np.ndarray],
+                             seeds: np.ndarray):
+        """One BGD epoch for the *whole cohort* as a single jitted vmap.
+
+        ``feats[m]`` is a padded [K, N, ...] stack (data.partition), ``avail``
+        a per-modality 0/1 upload mask [K] and ``seeds`` the per-client
+        dropout seeds (0 for unscheduled clients).  A masked-out modality
+        contributes exactly zero to the loss, so its gradient is exactly
+        zero and the "new" params equal the broadcast globals — downstream
+        aggregation masks them out again, reproducing the sequential
+        skip-the-dict-key semantics.
+
+        Returns stacked pytrees (leading client axis K): new params, grads,
+        per-client total loss, and per-modality squared distance to
+        ``init_params`` (for the Selection scheduler's model_dist).
+        """
+        mods = tuple(sorted(feats.keys()))
+        avail_f = {m: jnp.asarray(np.asarray(avail[m], np.float32))
+                   for m in mods}
+        seeds_j = jnp.asarray(np.asarray(seeds, np.uint32))
+        return self._batched_update_fn(mods)(
+            {m: global_params[m] for m in mods},
+            {m: init_params[m] for m in mods},
+            {m: feats[m] for m in mods},
+            labels, sample_mask, avail_f, seeds_j)
+
+    # ------------------------------------------------------------------
     @functools.lru_cache(maxsize=8)
     def _eval_fn(self, mods: Tuple[str, ...]):
         @jax.jit

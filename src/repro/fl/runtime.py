@@ -10,6 +10,31 @@ Per communication round t:
   4. per-modality aggregation with participated weights (Eq. 12);
   5. Lyapunov queues and the Theorem-1 ζ/δ trackers are updated;
   6. test metrics (multimodal + per-modality accuracy) are recorded.
+
+Batched round engine (default, ``batched=True``)
+------------------------------------------------
+Step 3 historically re-entered JAX once per scheduled client.  The batched
+engine instead executes *all* K clients' one-epoch BGD updates as a single
+jitted ``jax.vmap`` over a dense, device-resident client stack, making the
+round — not the client — the unit of compute:
+
+* **Padding.** At experiment init the cohort is stacked into a
+  ``data.partition.StackedClients``: every modality is materialised for every
+  client at a fixed ``max_batch`` (the largest shard), ragged shards are
+  zero-padded, and a ``sample_mask`` [K, N] marks real samples.  Shapes are
+  round-invariant, so the step compiles exactly once.
+* **Masking.** A per-modality 0/1 *upload mask* [K] (scheduled ∧ no
+  transmission failure ∧ owns the modality ∧ did not drop it) replaces the
+  sequential path's skip-the-dict-key convention: a masked-out modality
+  contributes exactly zero to the fused loss (core.fusion), hence exactly
+  zero gradient, and is excluded from Eq. 12 by the same mask
+  (core.aggregation.stacked_weights / aggregate_stacked).  Dropout draws
+  per-sample keys (models.paper_models), so padding never perturbs the
+  masks of real samples.
+* **Equivalence.** With the same seed and schedule, the batched and
+  sequential paths produce identical Eq. 12 weights and globally aggregated
+  params up to float32 reduction order (tests/test_batched_equivalence.py).
+  The sequential loop is kept behind ``batched=False`` for exactly this A/B.
 """
 from __future__ import annotations
 
@@ -53,10 +78,13 @@ class MFLExperiment:
                  eta: float = 0.05, V: float = 1.0, seed: int = 0,
                  params: Optional[WirelessParams] = None,
                  scheduler_kwargs: Optional[dict] = None,
-                 eval_every: int = 1):
+                 eval_every: int = 1, batched: bool = True):
         self.rng = np.random.default_rng(seed)
         self.params = params or WirelessParams(K=K)
         self.eval_every = eval_every
+        self.batched = batched
+        self._stacked_dev = None            # device-resident client stack
+        self._stacked_src = None            # cohort it was built from
 
         full = synthetic.DATASETS[dataset](seed=seed, n=n_samples)
         self.train_ds, self.test_ds = train_test_split(full, 0.2, seed)
@@ -106,7 +134,31 @@ class MFLExperiment:
         failures = sorted(np.flatnonzero(dec.a & ~ok))
         participants = sorted(np.flatnonzero(ok))
 
-        # --- local updates ---
+        # --- local updates + aggregation (Eq. 12) + trackers ---
+        if self.batched:
+            w_t = self._round_batched(dec, participants)
+        else:
+            w_t = self._round_sequential(dec, participants)
+        self.last_weights = w_t
+        self.queues.step(dec.a.astype(float), ecom, self.cost.e_cmp,
+                         self.params.E_add)
+
+        metrics = {}
+        if t % self.eval_every == 0:
+            metrics = self.adapter.evaluate(self.global_params, self.test_ds)
+        rec = RoundRecord(t, list(map(int, participants)),
+                          list(map(int, failures)),
+                          float(self.queues.spent.sum()), metrics, sched_time)
+        self.history.append(rec)
+        self._round += 1
+        return rec
+
+    # ------------------------------------------------------------------
+    # local-update fan-out: sequential (reference) vs batched (default)
+    # ------------------------------------------------------------------
+    def _round_sequential(self, dec, participants) -> Dict[str, np.ndarray]:
+        """Reference path: one JAX re-entry per scheduled client."""
+        K = self.params.K
         client_params: List[Optional[dict]] = [None] * K
         client_grads: List[Optional[dict]] = [None] * K
         for k in participants:
@@ -123,30 +175,70 @@ class MFLExperiment:
                                 jax.tree.leaves({m: self.init_params[m]
                                                  for m in newp})))))
 
-        # --- aggregation (Eq. 12) ---
         # participated weights (Eq. 12), renormalised over what was actually
         # uploaded (a dropped modality is absent from the client's upload).
         w_t = agg.weights_from_uploads(self.data_sizes, client_params,
                                        self.all_mods)
         self.global_params = agg.aggregate(self.global_params, client_params,
                                            w_t)
-
-        # --- trackers ---
-        agg_grads = agg.aggregate_gradients(
-            [g for g in client_grads], w_t)
+        agg_grads = agg.aggregate_gradients(client_grads, w_t)
         self.bound.update(client_grads, agg_grads)
-        self.queues.step(dec.a.astype(float), ecom, self.cost.e_cmp,
-                         self.params.E_add)
+        return w_t
 
-        metrics = {}
-        if t % self.eval_every == 0:
-            metrics = self.adapter.evaluate(self.global_params, self.test_ds)
-        rec = RoundRecord(t, list(map(int, participants)),
-                          list(map(int, failures)),
-                          float(self.queues.spent.sum()), metrics, sched_time)
-        self.history.append(rec)
-        self._round += 1
-        return rec
+    def _round_batched(self, dec, participants) -> Dict[str, np.ndarray]:
+        """Batched path: the whole cohort's updates in one jitted vmap."""
+        K = self.params.K
+        upload = {m: np.zeros(K, bool) for m in self.all_mods}
+        for k in participants:
+            drop = (dec.dropout_modality[k]
+                    if dec.dropout_modality is not None else None)
+            mods = tuple(m for m in self.client_mods[k] if m != drop)
+            if not mods:
+                mods = tuple(self.client_mods[k])
+            for m in mods:
+                upload[m][k] = True
+        if not len(participants):
+            return agg.stacked_weights(self.data_sizes, upload)
+
+        # same np-rng consumption (and per-client keys) as the sequential loop
+        seeds = np.zeros(K, np.uint32)
+        for k in participants:
+            seeds[k] = self.rng.integers(2 ** 31)
+
+        feats, labels, smask = self._get_stacked()
+        newp, grads, _totals, dist_sq = self.adapter.batched_local_update(
+            self.global_params, self.init_params, feats, labels, smask,
+            upload, seeds)
+
+        w_t = agg.stacked_weights(self.data_sizes, upload)
+        self.global_params = agg.aggregate_stacked(self.global_params, newp,
+                                                   w_t)
+        agg_grads = agg.aggregate_gradients_stacked(grads, w_t)
+        self.bound.update_stacked(grads, upload, agg_grads)
+
+        d_sq = np.zeros(K)
+        for m in self.all_mods:
+            d_sq += np.asarray(dist_sq[m]) * upload[m]
+        part = np.asarray(participants, int)
+        self.model_dist[part] = np.sqrt(d_sq[part])
+        return w_t
+
+    def _get_stacked(self):
+        """Device-resident padded client stack, rebuilt if the cohort is
+        swapped out (e.g. a non-IID repartition after init).  Keyed on the
+        identities of the ClientData objects, so replacing the list *or*
+        individual entries invalidates the cache; mutating a client's
+        dataset arrays in place does not and is unsupported."""
+        src = tuple(map(id, self.clients))
+        if self._stacked_dev is None or self._stacked_src != src:
+            import jax.numpy as jnp
+            from ..data.partition import stack_clients
+            sc = stack_clients(self.clients, self.all_mods)
+            self._stacked_dev = (
+                {m: jnp.asarray(x) for m, x in sc.features.items()},
+                jnp.asarray(sc.labels), jnp.asarray(sc.sample_mask))
+            self._stacked_src = src
+        return self._stacked_dev
 
     def run(self, rounds: int, verbose: bool = False) -> List[RoundRecord]:
         for _ in range(rounds):

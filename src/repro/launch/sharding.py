@@ -52,6 +52,10 @@ _RULES: Sequence[Tuple[str, tuple]] = (
 
 
 def _resolve(spec: tuple, fsdp: Optional[tuple]) -> tuple:
+    # a singleton fsdp axis collapses to its bare name: P("data") and
+    # P(("data",)) shard identically but do not compare equal as specs
+    if fsdp is not None and len(fsdp) == 1:
+        fsdp = fsdp[0]
     return tuple((fsdp if s == FS else s) for s in spec)
 
 

@@ -48,20 +48,89 @@ def init_lstm_model(key, d_in: int, d_h: int, n_classes: int):
 
 def _lstm_layer(p, x):
     """x: [B, T, d_in] -> outputs [B, T, d_h]."""
-    B = x.shape[0]
-    d_h = p["wh"].shape[0]
+    return _lstm_scan(p["wi"], p["wh"], p["b"], x)
 
-    def cell(carry, xt):
+
+def _gate_acts(a):
+    i, f, g, o = jnp.split(a, 4, axis=-1)
+    return (jax.nn.sigmoid(i), jax.nn.sigmoid(f), jnp.tanh(g),
+            jax.nn.sigmoid(o))
+
+
+def _lstm_fwd_scan(wi, wh, b, x):
+    """Time-major scan; the input projection x@wi is hoisted out of the scan
+    as one large GEMM.  Returns (hs, pre-activations, cell states), all
+    time-major [T, B, ...]."""
+    B = x.shape[0]
+    d_h = wh.shape[0]
+    gx = (x @ wi + b).transpose(1, 0, 2)                  # [T, B, 4H]
+
+    def cell(carry, gx_t):
         h, c = carry
-        gates = xt @ p["wi"] + h @ p["wh"] + p["b"]
-        i, f, g, o = jnp.split(gates, 4, axis=-1)
-        c = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
-        h = jax.nn.sigmoid(o) * jnp.tanh(c)
-        return (h, c), h
+        a = gx_t + h @ wh
+        i, f, g, o = _gate_acts(a)
+        c2 = f * c + i * g
+        h2 = o * jnp.tanh(c2)
+        return (h2, c2), (h2, a, c2)
 
     init = (jnp.zeros((B, d_h)), jnp.zeros((B, d_h)))
-    _, hs = jax.lax.scan(cell, init, x.transpose(1, 0, 2))
+    _, (hs, a_s, cs) = jax.lax.scan(cell, init, gx)
+    return hs, a_s, cs
+
+
+@jax.custom_vjp
+def _lstm_scan(wi, wh, b, x):
+    hs, _, _ = _lstm_fwd_scan(wi, wh, b, x)
     return hs.transpose(1, 0, 2)
+
+
+def _lstm_scan_fwd(wi, wh, b, x):
+    hs, a_s, cs = _lstm_fwd_scan(wi, wh, b, x)
+    return hs.transpose(1, 0, 2), (wi, wh, x, hs, a_s, cs)
+
+
+def _lstm_scan_bwd(res, dout):
+    """Hand-rolled VJP keeping the backward scan in *activation space*.
+
+    Autodiff of the naive scan accumulates the [d_in, 4H] / [H, 4H] weight
+    gradients inside the backward scan carry — under a per-client vmap that
+    carry gains a K axis and the scan becomes memory-bound on [K, d_in, 4H]
+    updates per step.  Here the scan only propagates (dh, dc) [B, H] and
+    emits per-step gate gradients; every parameter gradient (and dx) is then
+    one large post-scan GEMM, which is what makes the batched round engine's
+    single-dispatch cohort update pay off (see fl/runtime.py).
+    """
+    wi, wh, x, hs, a_s, cs = res
+    T, B, d_h = hs.shape
+    dhs = dout.transpose(1, 0, 2)                         # [T, B, H]
+    c_prev = jnp.concatenate([jnp.zeros((1, B, d_h)), cs[:-1]], axis=0)
+
+    def cell(carry, inp):
+        dh_next, dc_next = carry
+        dh_t, a_t, c_t, cp_t = inp
+        i, f, g, o = _gate_acts(a_t)
+        tc = jnp.tanh(c_t)
+        dh = dh_t + dh_next
+        da_o = dh * tc * o * (1.0 - o)
+        dc = dc_next + dh * o * (1.0 - tc * tc)
+        da_i = dc * g * i * (1.0 - i)
+        da_f = dc * cp_t * f * (1.0 - f)
+        da_g = dc * i * (1.0 - g * g)
+        da = jnp.concatenate([da_i, da_f, da_g, da_o], axis=-1)
+        return (da @ wh.T, dc * f), da
+
+    init = (jnp.zeros((B, d_h)), jnp.zeros((B, d_h)))
+    _, das = jax.lax.scan(cell, init, (dhs, a_s, cs, c_prev), reverse=True)
+
+    h_prev = jnp.concatenate([jnp.zeros((1, B, d_h)), hs[:-1]], axis=0)
+    dwi = jnp.einsum("bti,tbg->ig", x, das)
+    dwh = jnp.einsum("tbh,tbg->hg", h_prev, das)
+    db = das.sum(axis=(0, 1))
+    dx = (das @ wi.T).transpose(1, 0, 2)
+    return dwi, dwh, db, dx
+
+
+_lstm_scan.defvjp(_lstm_scan_fwd, _lstm_scan_bwd)
 
 
 def lstm_apply(p, x, *, dropout_rng: Optional[jax.Array] = None,
@@ -69,7 +138,14 @@ def lstm_apply(p, x, *, dropout_rng: Optional[jax.Array] = None,
     """x: [B, T, d_in] -> logits [B, C]."""
     h = _lstm_layer(p["lstm0"], x)
     if dropout_rng is not None:
-        keep = jax.random.bernoulli(dropout_rng, 1.0 - dropout, h.shape)
+        # per-sample keys: sample i's mask depends only on (rng, i), never on
+        # the batch size, so a client padded into a stacked [K, N, ...] batch
+        # draws the same masks for its real samples as it does standalone —
+        # the batched-vs-sequential equivalence invariant (fl/runtime.py)
+        keys = jax.vmap(lambda i: jax.random.fold_in(dropout_rng, i))(
+            jnp.arange(h.shape[0]))
+        keep = jax.vmap(lambda k: jax.random.bernoulli(
+            k, 1.0 - dropout, h.shape[1:]))(keys)
         h = jnp.where(keep, h / (1.0 - dropout), 0.0)
     h = _lstm_layer(p["lstm1"], h)[:, -1, :]                  # last hidden
     h = jax.nn.relu(h @ p["fc"]["w"] + p["fc"]["b"])
@@ -103,15 +179,41 @@ def init_cnn_model(key, n_classes: int = 6, in_ch: int = 3,
     }
 
 
+def _maxpool1d(y, axis: int, window: int, stride: int):
+    """SAME 1-D max-pool along ``axis`` as a max over strided slices."""
+    H = y.shape[axis]
+    out_h = -(-H // stride)
+    ph = max((out_h - 1) * stride + window - H, 0)
+    pad = [(0, 0)] * y.ndim
+    pad[axis] = (ph // 2, ph - ph // 2)
+    y = jnp.pad(y, pad, constant_values=-jnp.inf)
+    out = None
+    for i in range(window):
+        idx = tuple(slice(None) if d != axis
+                    else slice(i, i + (out_h - 1) * stride + 1, stride)
+                    for d in range(y.ndim))
+        out = y[idx] if out is None else jnp.maximum(out, y[idx])
+    return out
+
+
+def _maxpool(y, window: int = 5, stride: int = 3):
+    """SAME 2-D max-pool, separated into two 1-D passes.
+
+    Forward-identical to ``lax.reduce_window`` (max is exact and separable);
+    the slice/select VJP avoids XLA's select-and-scatter and the separation
+    does window+window instead of window² slice gradients.  (Tie-breaking
+    differs — reduce_window credits the first maximum, jnp.maximum splits —
+    a measure-zero event for real activations.)
+    """
+    return _maxpool1d(_maxpool1d(y, 1, window, stride), 2, window, stride)
+
+
 def _conv_pool(x, w):
     y = jax.lax.conv_general_dilated(
         x, w, window_strides=(1, 1), padding="SAME",
         dimension_numbers=("NHWC", "HWIO", "NHWC"))
     y = jax.nn.relu(y)
-    y = jax.lax.reduce_window(
-        y, -jnp.inf, jax.lax.max, window_dimensions=(1, 5, 5, 1),
-        window_strides=(1, 3, 3, 1), padding="SAME")
-    return y
+    return _maxpool(y)
 
 
 def cnn_apply(p, x, **_):

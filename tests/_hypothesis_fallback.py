@@ -1,0 +1,115 @@
+"""Deterministic fallback shim for ``hypothesis``.
+
+CI installs the real hypothesis (see requirements.txt); air-gapped or minimal
+environments may not have it, and the suite must still collect and pass there.
+``install()`` registers a tiny stand-in module under ``sys.modules`` *only if*
+the real package is unavailable.  The shim supports exactly the API surface the
+test-suite uses — ``@settings(max_examples=..., deadline=...)``, ``@given``,
+``st.integers`` and ``st.sampled_from`` — and replays a fixed, deterministic
+example set (boundary values first, then seeded pseudo-random draws) instead
+of doing real property-based search.
+"""
+from __future__ import annotations
+
+import random
+import sys
+import types
+
+
+class _Strategy:
+    """A value generator with deterministic indexed examples."""
+
+    def __init__(self, example_fn):
+        self._example_fn = example_fn
+
+    def example_at(self, i: int, rng: random.Random):
+        return self._example_fn(i, rng)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    def gen(i, rng):
+        if i == 0:
+            return min_value
+        if i == 1:
+            return max_value
+        return rng.randint(min_value, max_value)
+
+    return _Strategy(gen)
+
+
+def sampled_from(elements) -> _Strategy:
+    elements = list(elements)
+
+    def gen(i, rng):
+        if i < len(elements):
+            return elements[i]
+        return rng.choice(elements)
+
+    return _Strategy(gen)
+
+
+def floats(min_value: float, max_value: float, **_kw) -> _Strategy:
+    def gen(i, rng):
+        if i == 0:
+            return min_value
+        if i == 1:
+            return max_value
+        return rng.uniform(min_value, max_value)
+
+    return _Strategy(gen)
+
+
+def booleans() -> _Strategy:
+    return sampled_from([False, True])
+
+
+def given(*strategies):
+    def deco(fn):
+        def wrapper():
+            n = getattr(wrapper, "_max_examples", 10)
+            rng = random.Random(fn.__qualname__)  # deterministic per test
+            for i in range(n):
+                vals = tuple(s.example_at(i, rng) for s in strategies)
+                fn(*vals)
+
+        # NOTE: deliberately no functools.wraps — pytest must see a
+        # zero-argument test, not the wrapped signature (it would try to
+        # resolve the strategy parameters as fixtures).
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper._max_examples = 10
+        return wrapper
+
+    return deco
+
+
+def settings(max_examples: int = 10, deadline=None, **_kw):
+    def deco(fn):
+        if hasattr(fn, "_max_examples"):
+            fn._max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def install() -> None:
+    if "hypothesis" in sys.modules:
+        return
+    try:
+        import hypothesis  # noqa: F401  (real package wins when available)
+        return
+    except ImportError:
+        pass
+    mod = types.ModuleType("hypothesis")
+    st = types.ModuleType("hypothesis.strategies")
+    st.integers = integers
+    st.sampled_from = sampled_from
+    st.floats = floats
+    st.booleans = booleans
+    mod.given = given
+    mod.settings = settings
+    mod.strategies = st
+    mod.__is_fallback_shim__ = True
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st

@@ -1,8 +1,19 @@
+import importlib.util
 import os
 
 # Tests must see exactly ONE CPU device (the 512-device flag is dry-run-only;
 # the mini dry-run test spawns a subprocess with its own XLA_FLAGS).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+# If the real `hypothesis` is not installed, register the deterministic shim
+# BEFORE any test module is imported (property tests then replay a fixed
+# example set instead of failing at collection).
+_spec = importlib.util.spec_from_file_location(
+    "_hypothesis_fallback",
+    os.path.join(os.path.dirname(__file__), "_hypothesis_fallback.py"))
+_mod = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(_mod)
+_mod.install()
 
 import numpy as np
 import pytest
