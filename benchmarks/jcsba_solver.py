@@ -1,0 +1,198 @@
+"""JCSBA solver throughput: sequential numpy vs fused jitted batch, plus the
+many-scenario sweep the batched solver unlocks.
+
+Two measurements:
+
+* ``per_round`` — wall-clock per JCSBA solve through ``JCSBAScheduler`` for
+  each backend (``seq`` = the original scalar immune+KKT path, ``np`` = the
+  float64 batched mirror, ``jax`` = the fused jitted program), identical
+  round contexts per backend.  The acceptance number is the jax-vs-seq
+  speedup at K=50.
+* ``sweep`` — a scenario grid (τ_max × B_max × modality profile) solved as
+  ``jit(vmap(scan(...)))``: every scenario runs T rounds with Lyapunov queue
+  dynamics and warm-started antibodies entirely on device.  This is the
+  workload that is intractable on the sequential path (it would be
+  n_scenarios × T sequential solves).
+
+  PYTHONPATH=src python -m benchmarks.jcsba_solver                # full
+  PYTHONPATH=src python -m benchmarks.jcsba_solver --tiny         # CI smoke
+  PYTHONPATH=src python -m benchmarks.jcsba_solver --json-out BENCH_jcsba_solver.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import List, Optional
+
+import numpy as np
+
+
+def _round_inputs(K: int, dataset: str, seed: int, params=None):
+    """Static per-scenario pieces: costs, channel, bound trackers."""
+    from repro.core.aggregation import unified_weights
+    from repro.core.convergence import BoundState
+    from repro.wireless import cost as wcost
+    from repro.wireless.channel import Channel
+    from repro.wireless.params import MODALITY_PROFILES, WirelessParams
+
+    params = params or WirelessParams(K=K)
+    rng = np.random.default_rng(seed)
+    prof = MODALITY_PROFILES[dataset]
+    m1, m2 = sorted(prof.keys())
+    mods = ([(m1, m2), (m1,), (m2,)] * (K // 3 + 1))[:K]
+    sizes = [80] * K
+    cc = wcost.client_costs(sizes, mods, prof, params)
+    ch = Channel(params, rng)
+    w = unified_weights(sizes, mods, [m1, m2])
+    bound = BoundState(K, [m1, m2], mods, w, sizes)
+    for m in bound.mods:
+        bound.zeta[m] = float(rng.uniform(0.5, 2.0))
+        bound.delta[m] = rng.uniform(0.1, 0.6, K)
+    return params, cc, ch, bound, mods, rng
+
+
+# ---------------------------------------------------------------------------
+def bench_per_round(K: int, rounds: int, dataset: str = "crema_d",
+                    solvers=("seq", "jax")) -> List[dict]:
+    from repro.wireless.schedulers import ScheduleContext, make_scheduler
+
+    out = {}
+    for solver in solvers:
+        params, cc, ch, bound, mods, rng = _round_inputs(K, dataset, seed=0)
+        sched = make_scheduler("jcsba", np.random.default_rng(1),
+                               solver=solver)
+        ctxs = [ScheduleContext(h=ch.draw(), Q=rng.uniform(0, 0.01, K),
+                                cost=cc, params=params, bound=bound,
+                                round_idx=t, model_dist=np.zeros(K),
+                                client_modalities=mods)
+                for t in range(rounds + 1)]
+        sched.schedule(ctxs[0])                     # warmup (jit compile)
+        t0 = time.perf_counter()
+        for ctx in ctxs[1:]:
+            sched.schedule(ctx)
+        out[solver] = (time.perf_counter() - t0) / rounds
+    rows = []
+    for solver in solvers:
+        rows.append({"K": K, "dataset": dataset, "solver": solver,
+                     "rounds": rounds,
+                     "ms_per_round": round(out[solver] * 1e3, 3),
+                     "speedup_vs_seq": round(out["seq"] / out[solver], 2)})
+        print(f"per_round K={K:4d} {solver:4s} "
+              f"{out[solver] * 1e3:9.2f} ms/solve  "
+              f"speedup={out['seq'] / out[solver]:6.2f}x", flush=True)
+    return rows
+
+
+# ---------------------------------------------------------------------------
+def bench_sweep(K: int, rounds: int, tau_grid, bmax_grid,
+                datasets=("crema_d", "iemocap"), seed: int = 0) -> dict:
+    """jit(vmap(scan)): the full scenario grid × T rounds in one program."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.wireless.lyapunov import queue_update
+    from repro.wireless.params import WirelessParams
+    from repro.wireless.solver import SolverHyper, build_solver_data
+    from repro.wireless.solver.common import B_LO
+    from repro.wireless.solver.jaxsolver import _rate, solve_core, to_device
+
+    hp = SolverHyper()
+    scen, h_seqs = [], []
+    for dataset in datasets:
+        for tau in tau_grid:
+            for bmax in bmax_grid:
+                params = WirelessParams(K=K, tau_max=tau, B_max=bmax)
+                params_, cc, ch, bound, _, rng = _round_inputs(
+                    K, dataset, seed, params)
+                data = build_solver_data(ch.draw(), rng.uniform(0, 0.01, K),
+                                         cc, params, bound, V=1.0)
+                data["E_add"] = params.E_add
+                scen.append(to_device(data))
+                h_seqs.append(np.stack([ch.draw() for _ in range(rounds)]))
+    n_scen = len(scen)
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *scen)
+    h_all = jnp.asarray(np.stack(h_seqs), jnp.float32)     # [N, T, K]
+    keys = jax.random.split(jax.random.PRNGKey(seed), n_scen)
+
+    def one_scenario(data, h_seq, key):
+        def round_body(carry, h_t):
+            Q, warm, key = carry
+            key, sub = jax.random.split(key)
+            d = dict(data)
+            d["Q"], d["h"] = Q, h_t
+            seeds = jnp.stack([warm, jnp.zeros_like(warm)])
+            a, J, B = solve_core(d, seeds, sub, hp)
+            r = _rate(jnp.maximum(B, B_LO), h_t, d["p_tx"], d["N0"])
+            ecom = d["p_tx"] * jnp.where(a, d["gamma"] / r, 0.0)
+            Q = queue_update(Q, a.astype(Q.dtype) * (ecom + d["e_cmp"]),
+                             d["E_add"])
+            return (Q, a, key), (J, a.sum())
+        carry = (data["Q"], jnp.zeros(h_seq.shape[1], bool), key)
+        _, (Js, nsched) = jax.lax.scan(round_body, carry, h_seq)
+        return Js, nsched
+
+    run = jax.jit(jax.vmap(one_scenario))
+    Js, ns = jax.block_until_ready(run(stacked, h_all, keys))   # compile
+    t0 = time.perf_counter()
+    Js, ns = jax.block_until_ready(run(stacked, h_all, keys))
+    wall = time.perf_counter() - t0
+    total = n_scen * rounds
+    row = {"K": K, "n_scenarios": n_scen, "rounds": rounds,
+           "grid": f"{len(datasets)} profiles x {len(tau_grid)} tau_max x "
+                   f"{len(bmax_grid)} B_max",
+           "total_solves": total, "wall_s": round(wall, 3),
+           "solves_per_sec": round(total / wall, 2),
+           "mean_scheduled": round(float(np.mean(np.asarray(ns))), 2),
+           "objective_finite": bool(np.isfinite(np.asarray(Js)).all())}
+    print(f"sweep K={K} {row['grid']}: {total} solves in {wall:.2f}s "
+          f"-> {row['solves_per_sec']} solves/s", flush=True)
+    return row
+
+
+# ---------------------------------------------------------------------------
+def run_benchmark(Ks: List[int], rounds: int, sweep_rounds: int,
+                  tau_grid, bmax_grid, datasets) -> dict:
+    per_round = []
+    for K in Ks:
+        per_round.extend(bench_per_round(K, rounds, dataset=datasets[0]))
+    sweep = [bench_sweep(Ks[-1], sweep_rounds, tau_grid, bmax_grid,
+                         datasets)]
+    seq_ms = {r["K"]: r["ms_per_round"] for r in per_round
+              if r["solver"] == "seq"}
+    for row in sweep:
+        if row["K"] in seq_ms:
+            est_seq_s = seq_ms[row["K"]] * 1e-3 * row["total_solves"]
+            row["est_seq_wall_s"] = round(est_seq_s, 1)
+            row["sweep_speedup_vs_seq"] = round(est_seq_s / row["wall_s"], 1)
+    return {"benchmark": "jcsba_solver",
+            "regime": "random Q/h round contexts, Table-2 wireless params",
+            "per_round": per_round, "sweep": sweep}
+
+
+def main(argv: Optional[List[str]] = None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: K=6, 2 rounds, 2x2 scenario grid")
+    ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args(argv)
+    if args.tiny:
+        out = run_benchmark([6], rounds=args.rounds or 2, sweep_rounds=2,
+                            tau_grid=[0.01, 0.02], bmax_grid=[10e6],
+                            datasets=["iemocap"])
+    else:
+        out = run_benchmark([10, 50], rounds=args.rounds or 5,
+                            sweep_rounds=10,
+                            tau_grid=[0.005, 0.01, 0.02, 0.05],
+                            bmax_grid=[5e6, 10e6, 20e6],
+                            datasets=["crema_d", "iemocap"])
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(out, f, indent=2)
+        print(f"wrote {args.json_out}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

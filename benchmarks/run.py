@@ -18,6 +18,9 @@ Benchmarks:
                         (``--tiny`` shrinks it to the CI smoke config: K=4,
                         2 rounds, both paths; ``--json-out`` dumps all rows
                         plus the raw benchmark payloads as JSON)
+  jcsba_solver_*      — JCSBA per-round solve time, sequential numpy vs the
+                        fused jitted population solver, plus the vmapped
+                        scenario-grid sweep (see benchmarks/jcsba_solver.py)
 """
 from __future__ import annotations
 
@@ -185,6 +188,33 @@ def bench_roofline(quick: bool):
          ";".join(f"{k}={v}" for k, v in sorted(by_dom.items())))
 
 
+def bench_jcsba_solver(quick: bool):
+    from benchmarks.jcsba_solver import run_benchmark
+    if TINY:
+        out = run_benchmark([6], rounds=2, sweep_rounds=2,
+                            tau_grid=[0.01, 0.02], bmax_grid=[10e6],
+                            datasets=["iemocap"])
+    elif quick:
+        out = run_benchmark([10, 50], rounds=3, sweep_rounds=5,
+                            tau_grid=[0.01, 0.02], bmax_grid=[5e6, 10e6],
+                            datasets=["crema_d"])
+    else:
+        out = run_benchmark([10, 50], rounds=5, sweep_rounds=10,
+                            tau_grid=[0.005, 0.01, 0.02, 0.05],
+                            bmax_grid=[5e6, 10e6, 20e6],
+                            datasets=["crema_d", "iemocap"])
+    PAYLOADS["jcsba_solver"] = out
+    for r in out["per_round"]:
+        emit(f"jcsba_solver_K={r['K']}_{r['solver']}",
+             r["ms_per_round"] * 1e3,
+             f"speedup_vs_seq={r['speedup_vs_seq']}x")
+    for r in out["sweep"]:
+        emit(f"jcsba_solver_sweep_K={r['K']}",
+             r["wall_s"] / r["total_solves"] * 1e6,
+             f"solves_per_sec={r['solves_per_sec']};"
+             f"n_scenarios={r['n_scenarios']};rounds={r['rounds']}")
+
+
 def bench_batched_rounds(quick: bool):
     from benchmarks.batched_rounds import run_benchmark
     if TINY:
@@ -223,6 +253,7 @@ def main() -> None:
         "kernels": bench_kernels,
         "roofline": bench_roofline,
         "batched_rounds": bench_batched_rounds,
+        "jcsba_solver": bench_jcsba_solver,
     }
     print("name,us_per_call,derived")
     for name, fn in benches.items():

@@ -19,6 +19,10 @@ def main():
     ap.add_argument("--dataset", default="crema_d")
     ap.add_argument("--n-samples", type=int, default=800)
     ap.add_argument("--baseline", default="random")
+    ap.add_argument("--solver", default="jax", choices=["jax", "np", "seq"],
+                    help="JCSBA backend: fused jitted batch (jax), float64 "
+                         "numpy mirror (np), or the original sequential "
+                         "scalar path (seq)")
     ap.add_argument("--out", default="examples/out_wireless_mfl.json")
     args = ap.parse_args()
 
@@ -26,7 +30,8 @@ def main():
     for algo in [args.baseline, "jcsba"]:
         print(f"=== {algo} ===")
         exp = MFLExperiment(dataset=args.dataset, scheduler=algo,
-                            n_samples=args.n_samples, seed=0, eval_every=4)
+                            n_samples=args.n_samples, seed=0, eval_every=4,
+                            solver=args.solver)
         exp.run(args.rounds, verbose=False)
         fin = exp.final_metrics()
         curves = [(r.round, r.metrics.get("multimodal"), r.energy_total)

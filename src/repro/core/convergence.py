@@ -145,6 +145,31 @@ class BoundState:
         return (-(2 * self.eta - gamma * self.eta ** 2) / 2.0 * grad_sq_sum
                 + self.bound_term(a))
 
+    # ------------------------------------------------------------------
+    def snapshot(self) -> Dict[str, np.ndarray]:
+        """Dense-array view of the tracker state for the batched solver.
+
+        Everything ``a1_a2`` / ``objective`` read from Python dicts is packed
+        into [M]/[M, K] arrays so the Theorem-1 term can be evaluated for a
+        whole antibody population inside one jitted program
+        (``objective_batched``).  A fresh snapshot must be taken every round —
+        ζ/δ move whenever ``update``/``update_stacked`` run."""
+        M, K = len(self.mods), self.K
+        has = np.zeros((M, K), bool)
+        for i, m in enumerate(self.mods):
+            for k in range(K):
+                has[i, k] = m in self.client_mods[k]
+        return {
+            "zeta2": np.array([self.zeta[m] ** 2 for m in self.mods]),
+            "delta2": np.stack([np.square(self.delta[m])
+                                for m in self.mods]) if M else
+                      np.zeros((0, K)),
+            "wbar": np.stack([self.w_bar[m] for m in self.mods]) if M else
+                    np.zeros((0, K)),
+            "has": has,
+            "D": self.D,
+        }
+
     def objective(self, a: np.ndarray, gamma: float = 1.0) -> float:
         """Scheduling objective = Theorem-2 RHS restricted to a-dependent
         terms, INCLUDING the descent credit of covered modalities.
@@ -168,3 +193,42 @@ class BoundState:
         c = (2 * self.eta - gamma * self.eta ** 2) / 2.0
         return (self.eta * self.rho * float(np.sqrt(A1 + A2))
                 - c * covered)
+
+
+# ---------------------------------------------------------------------------
+# Batched jnp port of a1_a2 / objective — the Theorem-1 term for a whole
+# antibody population A ∈ {0,1}^{P×K} as one fused array program.  Used by
+# wireless.solver so the bound fuses into the same jitted JCSBA solve; the
+# float64 numpy mirror lives in wireless/solver/ref.py and parity between the
+# three implementations is asserted in tests/test_solver_parity.py.
+# ---------------------------------------------------------------------------
+def a1_a2_batched(A, zeta2, delta2, wbar, has, D):
+    """A₁, A₂ of Theorem 1 for a population.
+
+    A: [P, K] (bool or 0/1 float); snapshot arrays as from
+    ``BoundState.snapshot()``.  Returns (A1 [P], A2 [P])."""
+    Af = jnp.asarray(A, jnp.float32)
+    part = has[None] & (Af[:, None, :] > 0.5)             # [P, M, K]
+    sched = part.any(-1)                                  # m ∈ M^t   [P, M]
+    A1 = ((~sched) * zeta2).sum(-1)
+    wt_raw = jnp.where(part, D, 0.0)                      # w^t_{k,m} numerator
+    denom = wt_raw.sum(-1, keepdims=True)
+    wt = jnp.where(denom > 0, wt_raw / jnp.maximum(denom, 1e-30), 0.0)
+    cover = (Af[:, None, :] * wbar).sum(-1)               # Σ a_k w̄_{k,m}
+    coeff = wt + wbar - 2.0 * Af[:, None, :] * wbar
+    A2_m = 2.0 * (1.0 - cover) * (coeff * delta2).sum(-1)
+    A2 = jnp.maximum((sched * A2_m).sum(-1), 0.0)
+    return A1, A2
+
+
+def objective_batched(A, zeta2, delta2, wbar, has, D,
+                      eta: float, rho: float, gamma: float = 1.0):
+    """Population twin of ``BoundState.objective`` — ηρ√(A₁+A₂) minus the
+    descent credit of covered modalities (see ``objective``'s docstring for
+    why the credit is kept).  Returns [P]."""
+    Af = jnp.asarray(A, jnp.float32)
+    A1, A2 = a1_a2_batched(Af, zeta2, delta2, wbar, has, D)
+    sched = (has[None] & (Af[:, None, :] > 0.5)).any(-1)
+    covered = (sched * zeta2).sum(-1)
+    c = (2 * eta - gamma * eta ** 2) / 2.0
+    return eta * rho * jnp.sqrt(A1 + A2) - c * covered

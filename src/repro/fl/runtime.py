@@ -2,7 +2,11 @@
 
 Per communication round t:
   1. redraw channel gains h_k;
-  2. the server solves the scheduling/bandwidth problem (JCSBA or a baseline);
+  2. the server solves the scheduling/bandwidth problem (JCSBA or a baseline).
+     JCSBA runs on the population-batched solver (``wireless.solver``) — one
+     fused jitted program per round evaluating the whole immune population;
+     ``solver="np"`` selects its float64 numpy mirror and ``solver="seq"``
+     the original sequential scalar path (see ``schedulers.JCSBAScheduler``);
   3. scheduled clients run the local update (one BGD epoch, Eq. 7) — clients
      whose latency constraint is violated under the chosen bandwidth are
      *transmission failures*: they consume energy but contribute no update
@@ -78,7 +82,8 @@ class MFLExperiment:
                  eta: float = 0.05, V: float = 1.0, seed: int = 0,
                  params: Optional[WirelessParams] = None,
                  scheduler_kwargs: Optional[dict] = None,
-                 eval_every: int = 1, batched: bool = True):
+                 eval_every: int = 1, batched: bool = True,
+                 solver: str = "jax"):
         self.rng = np.random.default_rng(seed)
         self.params = params or WirelessParams(K=K)
         self.eval_every = eval_every
@@ -110,6 +115,7 @@ class MFLExperiment:
         kw = dict(scheduler_kwargs or {})
         if scheduler == "jcsba":
             kw.setdefault("V", V)
+            kw.setdefault("solver", solver)
         self.scheduler: Scheduler = make_scheduler(scheduler, self.rng, **kw)
         self.model_dist = np.zeros(K)
         self.history: List[RoundRecord] = []

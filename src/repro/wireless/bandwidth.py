@@ -13,6 +13,13 @@ solve the *same* KKT system by bisection on κ* — Σ_k B_k(κ) is monotone
 increasing in κ, so the bisection converges to the unique KKT point with the
 same O(U log 1/ε) inner work.  Equivalence is asserted against a brute-force
 projected-grid optimiser in tests/test_bandwidth.py.
+
+This module is the scalar *sequential* reference (one candidate schedule per
+call, adaptive-termination loops, ``None`` for infeasibility).  The hot path
+used by ``schedulers.JCSBAScheduler`` is the population-batched twin in
+``wireless/solver/`` — fixed-iteration bisections vmapped over whole antibody
+populations, with infeasibility returned as a mask; cross-equivalence against
+this module is asserted in tests/test_solver_parity.py.
 """
 from __future__ import annotations
 

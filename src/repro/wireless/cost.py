@@ -17,6 +17,11 @@ class ClientCost:
     tau_cmp: np.ndarray         # computation latency [s] (Eq. 17)
     e_cmp: np.ndarray           # computation energy [J] (Eq. 18)
 
+    def tau_residual(self, params: WirelessParams) -> np.ndarray:
+        """τ_max − τ_cmp_k — the communication-latency budget left per client
+        (the RHS denominator of the In1 constraint in P4.2')."""
+        return params.tau_max - self.tau_cmp
+
 
 def client_costs(data_sizes: Sequence[int],
                  client_modalities: Sequence[Sequence[str]],

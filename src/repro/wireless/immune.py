@@ -11,6 +11,12 @@ The paper returns the best antibody of the final generation; we additionally
 keep the best *feasible* antibody seen across generations (never worse).
 Objective evaluations are memoised — the bandwidth KKT solve dominates the
 cost, and clones repeat genotypes frequently.
+
+This is the *sequential* reference (one eval_fn call per antibody), kept as
+the ``solver="seq"`` backend of ``schedulers.JCSBAScheduler``.  The default
+path is the population-batched rewrite in ``wireless/solver/`` — clone/
+mutate/select on a [P, K] population array with ``jax.random`` draws, every
+generation one fused jitted evaluation.
 """
 from __future__ import annotations
 

@@ -10,6 +10,18 @@ from __future__ import annotations
 import numpy as np
 
 
+def queue_update(Q, used, E_add):
+    """Pure functional Q_k^{t+1} = max(Q_k − (E_add − used_k), 0), where
+    ``used_k = a_k (e_com_k + e_cmp_k)`` is the round's actual energy draw.
+
+    Backend-agnostic (works on numpy and jnp arrays alike), so the batched
+    solver's scenario-sweep driver can run the queue recursion inside a
+    ``lax.scan`` over rounds.  ``EnergyQueues.step`` is the stateful host-side
+    twin used by the FL runtime."""
+    Qn = Q - (E_add - used)
+    return Qn * (Qn > 0)
+
+
 class EnergyQueues:
     def __init__(self, K: int):
         self.Q = np.zeros(K)
@@ -20,11 +32,10 @@ class EnergyQueues:
              E_add: float) -> np.ndarray:
         a = np.asarray(a, float)
         used = a * (e_com + e_cmp)
-        q = E_add - used
-        self.Q = np.maximum(self.Q - q, 0.0)
+        self.Q = np.asarray(queue_update(self.Q, used, E_add))
         self.spent += used
         self.t += 1
-        return q
+        return E_add - used
 
     def mean_queue(self) -> float:
         return float(self.Q.mean())

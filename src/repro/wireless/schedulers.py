@@ -17,13 +17,11 @@ baselines) are marked as transmission failures by the runtime.
 from __future__ import annotations
 
 import dataclasses
-import itertools
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
-from .bandwidth import allocate, b_min
-from .channel import uplink_rate
+from .bandwidth import allocate
 from .cost import ClientCost, com_energy, com_latency
 from .params import WirelessParams
 from ..core.convergence import BoundState
@@ -144,14 +142,35 @@ class DropoutScheduler(Scheduler):
 
 
 class JCSBAScheduler(Scheduler):
-    """The paper's joint client-scheduling + bandwidth-allocation algorithm."""
+    """The paper's joint client-scheduling + bandwidth-allocation algorithm.
+
+    Three interchangeable solver backends (``solver=``):
+
+    * ``"jax"`` (default) — the population-batched fused program in
+      ``wireless.solver.jaxsolver``: one jitted call evaluates the whole
+      immune population (KKT bandwidth bisection + Theorem-1 bound + energy
+      term) per generation;
+    * ``"np"`` — the float64 numpy mirror (``wireless.solver.ref``), same
+      algorithm on the same random bits — the parity reference;
+    * ``"seq"`` — the original sequential memoised path (scalar
+      ``bandwidth.allocate`` inside ``immune.immune_search``), kept as the
+      baseline the batched solver is benchmarked against.
+
+    Warm-start seeding is explicit for every backend: the previous round's
+    winner (when one exists) and the all-zeros antibody are written over the
+    first population rows, so an empty schedule is always evaluated and the
+    returned objective is always finite.
+    """
     name = "jcsba"
 
     def __init__(self, rng: np.random.Generator, V: float = 1.0,
-                 immune_kwargs: Optional[dict] = None):
+                 immune_kwargs: Optional[dict] = None, solver: str = "jax"):
+        if solver not in ("jax", "np", "seq"):
+            raise ValueError(f"unknown JCSBA solver backend {solver!r}")
         self.rng = rng
         self.V = V
         self.immune_kwargs = immune_kwargs or {}
+        self.solver = solver
         self._last_a: Optional[np.ndarray] = None
 
     # -- inner: bandwidth for a candidate a; returns (B, J2) or (None, inf) --
@@ -162,7 +181,7 @@ class JCSBAScheduler(Scheduler):
                       if ctx.bound is not None else 0.0)
         if len(part) == 0:
             return np.zeros(K), self.V * bound_term
-        tau_rem = ctx.params.tau_max - ctx.cost.tau_cmp[part]
+        tau_rem = ctx.cost.tau_residual(ctx.params)[part]
         Bp = allocate(ctx.Q[part], ctx.cost.gamma_bits[part], ctx.h[part],
                       tau_rem, ctx.params)
         if Bp is None:
@@ -176,7 +195,17 @@ class JCSBAScheduler(Scheduler):
               + float((ctx.Q[part] * (ecom + ctx.cost.e_cmp[part])).sum()))
         return B, J2
 
-    def schedule(self, ctx: ScheduleContext) -> ScheduleDecision:
+    def _seed_antibodies(self, K: int) -> np.ndarray:
+        """Warm-start rows: last round's winner (when one exists) followed by
+        the all-zeros antibody — the latter is always present, so the empty
+        schedule is always in the evaluated population.  1 row on round 0,
+        2 afterwards (the batched backends pad to their fixed [2, K] shape)."""
+        rows = [] if self._last_a is None else [np.asarray(self._last_a, bool)]
+        rows.append(np.zeros(K, bool))
+        return np.stack(rows)
+
+    def _schedule_seq(self, ctx: ScheduleContext) -> ScheduleDecision:
+        """Original sequential path: scalar KKT solve per memoised antibody."""
         from .immune import immune_search
         K = len(ctx.h)
 
@@ -184,13 +213,8 @@ class JCSBAScheduler(Scheduler):
             _, J = self._evaluate(np.asarray(a, bool), ctx)
             return J
 
-        seeds = []
-        if self._last_a is not None:
-            seeds.append(self._last_a)
-        seeds.append(np.zeros(K, bool))
         a_star, J_star = immune_search(
-            eval_fn, K, self.rng,
-            seed_antibodies=np.array(seeds) if seeds else None,
+            eval_fn, K, self.rng, seed_antibodies=self._seed_antibodies(K),
             **self.immune_kwargs)
         B, _ = self._evaluate(a_star, ctx)
         if B is None:                                   # paranoid fallback
@@ -198,6 +222,28 @@ class JCSBAScheduler(Scheduler):
             B = np.zeros(K)
         self._last_a = a_star.copy()
         return ScheduleDecision(a_star, B, objective=J_star)
+
+    def schedule(self, ctx: ScheduleContext) -> ScheduleDecision:
+        if self.solver == "seq":
+            return self._schedule_seq(ctx)
+        from .solver import (SolverHyper, build_solver_data, solve_round,
+                             solve_round_np)
+        K = len(ctx.h)
+        hp = SolverHyper(**self.immune_kwargs)
+        data = build_solver_data(ctx.h, ctx.Q, ctx.cost, ctx.params,
+                                 ctx.bound, self.V)
+        seeds = self._seed_antibodies(K)
+        if len(seeds) < 2:      # fixed [2, K] shape keeps the jit cache warm
+            seeds = np.vstack([seeds, np.zeros((2 - len(seeds), K), bool)])
+        # both backends consume the same jax.random bits from this seed, so
+        # solver="jax" and solver="np" walk the same search trajectory
+        draw_seed = int(self.rng.integers(2 ** 31))
+        solve = solve_round if self.solver == "jax" else solve_round_np
+        a_star, J_star, B = solve(data, seeds, draw_seed, hp)
+        a_star = np.asarray(a_star, bool)
+        self._last_a = a_star.copy()
+        return ScheduleDecision(a_star, np.asarray(B, float),
+                                objective=float(J_star))
 
 
 def make_scheduler(name: str, rng: np.random.Generator, **kw) -> Scheduler:

@@ -1,0 +1,16 @@
+"""Population-batched JCSBA solver subsystem (Algorithm 2 + P4.2' + Theorem 1
+as one fused program per round).
+
+* ``common``    — hyper-parameters, numerical conventions, round-data builder
+* ``jaxsolver`` — float32 jitted backend (``solver="jax"``)
+* ``ref``       — float64 numpy mirror     (``solver="np"``)
+
+The legacy scalar path (``wireless.bandwidth`` + ``wireless.immune``) stays
+available as ``solver="seq"`` in ``schedulers.JCSBAScheduler``.
+"""
+from .common import SolverHyper, build_solver_data
+from .jaxsolver import solve_core, solve_round
+from .ref import solve_round_np
+
+__all__ = ["SolverHyper", "build_solver_data", "solve_core", "solve_round",
+           "solve_round_np"]
