@@ -1,0 +1,165 @@
+"""Fused round engine vs the PR-2 split pipeline, plus whole-experiment
+scenario sweeps.
+
+Three measurements:
+
+* ``per_round`` — wall-clock per full MFL round (JCSBA schedule + local
+  updates + Eq. 12 aggregation + queue/tracker refresh) for three drivers on
+  identical configs: the *split* pipeline (PR 2: jitted solver, host hop,
+  jitted batched clients, host aggregation/trackers — ``batched=True``), the
+  *fused* per-round program (``fused=True``, one jit per round), and the
+  fused program under ``run_scanned`` (R rounds per dispatch).  The
+  acceptance number is fused-vs-split at K=50.
+* ``v_sweep`` — whole experiments vmapped over a V grid:
+  ``jit(vmap(scan(round_step)))`` runs every drift-penalty scenario for R
+  rounds with its own queue/warm-start/tracker/model dynamics entirely on
+  device — the Fig.-4 frontier workload (n_V × R fused rounds, zero host
+  hops).
+
+  PYTHONPATH=src python -m benchmarks.fused_round               # K=10/50
+  PYTHONPATH=src python -m benchmarks.fused_round --tiny        # CI smoke
+  PYTHONPATH=src python -m benchmarks.fused_round --json-out BENCH_fused_round.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import List, Optional
+
+import numpy as np
+
+
+def _make_experiment(dataset: str, K: int, n_samples: int, seed: int = 0,
+                     E_add: float = 0.01, **kw):
+    from repro.fl.runtime import MFLExperiment
+    from repro.wireless.params import WirelessParams
+    # keep the paper's per-client bandwidth density (Table 2: 10 MHz for
+    # K=10) as K grows, so JCSBA schedules real participant sets at every K —
+    # with the default absolute B_max, K=50 rounds degenerate to empty
+    # schedules and the split pipeline never even runs its client stage
+    params = WirelessParams(K=K, B_max=1e6 * K, E_add=E_add)
+    return MFLExperiment(dataset=dataset, scheduler="jcsba", K=K,
+                         n_samples=n_samples, seed=seed, eval_every=10 ** 9,
+                         params=params, **kw)
+
+
+def _n_samples(K: int, samples_per_client: float = 2.0) -> int:
+    # 0.8 = train fraction; keep every client shard non-empty
+    return max(int(samples_per_client * K / 0.8), int(K / 0.8) + K)
+
+
+# ---------------------------------------------------------------------------
+def bench_per_round(K: int, rounds: int, dataset: str = "iemocap"
+                    ) -> List[dict]:
+    n = _n_samples(K)
+
+    def time_loop(exp, use_scan: bool) -> float:
+        if use_scan:
+            exp.run_scanned(rounds)               # warmup: compile the scan
+            t0 = time.perf_counter()
+            exp.run_scanned(rounds)
+            return (time.perf_counter() - t0) / rounds
+        exp.run_round()                           # warmup: compile the step
+        t0 = time.perf_counter()
+        exp.run(rounds)
+        return (time.perf_counter() - t0) / rounds
+
+    secs = {
+        "split": time_loop(_make_experiment(dataset, K, n, batched=True),
+                           use_scan=False),
+        "fused": time_loop(_make_experiment(dataset, K, n, fused=True),
+                           use_scan=False),
+        "fused_scan": time_loop(_make_experiment(dataset, K, n, fused=True),
+                                use_scan=True),
+    }
+    rows = []
+    for name, s in secs.items():
+        rows.append({"K": K, "dataset": dataset, "engine": name,
+                     "rounds": rounds, "ms_per_round": round(s * 1e3, 3),
+                     "speedup_vs_split": round(secs["split"] / s, 2)})
+        print(f"per_round K={K:4d} {name:10s} {s * 1e3:9.2f} ms/round  "
+              f"speedup_vs_split={secs['split'] / s:6.2f}x", flush=True)
+    return rows
+
+
+# ---------------------------------------------------------------------------
+def bench_v_sweep(K: int, rounds: int, V_grid, dataset: str = "iemocap",
+                  seed: int = 0) -> dict:
+    """jit(vmap(scan)): every V scenario runs a whole experiment on device.
+
+    The sweep regime shrinks ``E_add`` so the long-term energy constraint C5
+    actually binds (the tiny synthetic shards draw ~2e-3 J per scheduled
+    round — under the Table-2 allowance the Lyapunov queues never charge and
+    every V collapses to the same schedule; cf. the same rescaling in
+    benchmarks/experiments.py)."""
+    import jax
+    from repro.fl.fused_round import draw_round_xs
+
+    exp = _make_experiment(dataset, K, _n_samples(K), seed=seed, fused=True,
+                           E_add=2e-4)
+    eng = exp._get_fused_engine()
+    carry = exp._carry
+    xs = draw_round_xs(exp, rounds)
+
+    carries, auxs = jax.block_until_ready(
+        eng.scan_v_grid(V_grid, carry, xs))                 # compile
+    t0 = time.perf_counter()
+    carries, auxs = jax.block_until_ready(
+        eng.scan_v_grid(V_grid, carry, xs))
+    wall = time.perf_counter() - t0
+
+    n_sched = np.asarray(auxs.a).sum(-1)                    # [n_V, R]
+    energy = np.asarray(carries.spent).sum(-1)              # [n_V]
+    total = len(V_grid) * rounds
+    row = {"K": K, "dataset": dataset, "rounds": rounds,
+           "V_grid": [float(v) for v in V_grid],
+           "total_fused_rounds": total, "wall_s": round(wall, 3),
+           "rounds_per_sec": round(total / wall, 2),
+           "energy_by_V": [round(float(e), 5) for e in energy],
+           "mean_scheduled_by_V": [round(float(x), 2)
+                                   for x in n_sched.mean(-1)]}
+    print(f"v_sweep K={K} |V|={len(V_grid)} x {rounds} rounds: "
+          f"{total} fused rounds in {wall:.2f}s -> "
+          f"{row['rounds_per_sec']} rounds/s", flush=True)
+    return row
+
+
+# ---------------------------------------------------------------------------
+def run_benchmark(Ks: List[int], rounds: int, sweep_rounds: int,
+                  V_grid, dataset: str = "iemocap") -> dict:
+    per_round = []
+    for K in Ks:
+        per_round.extend(bench_per_round(K, rounds, dataset))
+    sweep = bench_v_sweep(Ks[-1], sweep_rounds, V_grid, dataset)
+    return {"benchmark": "fused_round",
+            "regime": "cross-device shards (~2 samples/client), JCSBA "
+                      "schedule, Table-2 wireless params with B_max scaled "
+                      "to 1 MHz/client",
+            "per_round": per_round, "v_sweep": sweep}
+
+
+def main(argv: Optional[List[str]] = None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: K=4, 2 rounds, 3-point V grid")
+    ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args(argv)
+    if args.tiny:
+        out = run_benchmark([4], rounds=args.rounds or 2, sweep_rounds=2,
+                            V_grid=[0.1, 1.0, 10.0])
+    else:
+        out = run_benchmark([10, 50], rounds=args.rounds or 5,
+                            sweep_rounds=10,
+                            V_grid=[0.001, 0.01, 0.1, 0.5, 1.0, 2.0, 5.0,
+                                    10.0])
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(out, f, indent=2)
+        print(f"wrote {args.json_out}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

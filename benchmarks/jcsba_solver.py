@@ -14,6 +14,12 @@ Two measurements:
   workload that is intractable on the sequential path (it would be
   n_scenarios × T sequential solves).
 
+``--experiments`` extends the sweep from solver-only rounds to *whole
+experiments* per scenario: the fused round engine (fl/fused_round.py) scans
+schedule → local BGD updates → Eq. 12 aggregation → queue/tracker refresh for
+every scenario of a V grid under one ``jit(vmap(scan))`` — see
+``benchmarks.fused_round.bench_v_sweep``, which it reuses.
+
   PYTHONPATH=src python -m benchmarks.jcsba_solver                # full
   PYTHONPATH=src python -m benchmarks.jcsba_solver --tiny         # CI smoke
   PYTHONPATH=src python -m benchmarks.jcsba_solver --json-out BENCH_jcsba_solver.json
@@ -152,7 +158,8 @@ def bench_sweep(K: int, rounds: int, tau_grid, bmax_grid,
 
 # ---------------------------------------------------------------------------
 def run_benchmark(Ks: List[int], rounds: int, sweep_rounds: int,
-                  tau_grid, bmax_grid, datasets) -> dict:
+                  tau_grid, bmax_grid, datasets,
+                  experiment_sweep: bool = False) -> dict:
     per_round = []
     for K in Ks:
         per_round.extend(bench_per_round(K, rounds, dataset=datasets[0]))
@@ -165,28 +172,41 @@ def run_benchmark(Ks: List[int], rounds: int, sweep_rounds: int,
             est_seq_s = seq_ms[row["K"]] * 1e-3 * row["total_solves"]
             row["est_seq_wall_s"] = round(est_seq_s, 1)
             row["sweep_speedup_vs_seq"] = round(est_seq_s / row["wall_s"], 1)
-    return {"benchmark": "jcsba_solver",
-            "regime": "random Q/h round contexts, Table-2 wireless params",
-            "per_round": per_round, "sweep": sweep}
+    out = {"benchmark": "jcsba_solver",
+           "regime": "random Q/h round contexts, Table-2 wireless params",
+           "per_round": per_round, "sweep": sweep}
+    if experiment_sweep:
+        # solver-only scenarios → whole experiments per scenario: the fused
+        # round engine scans every V scenario's full MFL dynamics on device
+        from benchmarks.fused_round import bench_v_sweep
+        out["experiment_sweep"] = bench_v_sweep(
+            Ks[-1], sweep_rounds, V_grid=[0.01, 0.1, 1.0, 10.0],
+            dataset=datasets[0])
+    return out
 
 
 def main(argv: Optional[List[str]] = None) -> dict:
     ap = argparse.ArgumentParser()
     ap.add_argument("--tiny", action="store_true",
                     help="CI smoke: K=6, 2 rounds, 2x2 scenario grid")
+    ap.add_argument("--experiments", action="store_true",
+                    help="also scan whole experiments (fused round engine) "
+                         "per V scenario")
     ap.add_argument("--rounds", type=int, default=None)
     ap.add_argument("--json-out", default=None)
     args = ap.parse_args(argv)
     if args.tiny:
         out = run_benchmark([6], rounds=args.rounds or 2, sweep_rounds=2,
                             tau_grid=[0.01, 0.02], bmax_grid=[10e6],
-                            datasets=["iemocap"])
+                            datasets=["iemocap"],
+                            experiment_sweep=args.experiments)
     else:
         out = run_benchmark([10, 50], rounds=args.rounds or 5,
                             sweep_rounds=10,
                             tau_grid=[0.005, 0.01, 0.02, 0.05],
                             bmax_grid=[5e6, 10e6, 20e6],
-                            datasets=["crema_d", "iemocap"])
+                            datasets=["crema_d", "iemocap"],
+                            experiment_sweep=args.experiments)
     if args.json_out:
         with open(args.json_out, "w") as f:
             json.dump(out, f, indent=2)

@@ -21,6 +21,11 @@ Benchmarks:
   jcsba_solver_*      — JCSBA per-round solve time, sequential numpy vs the
                         fused jitted population solver, plus the vmapped
                         scenario-grid sweep (see benchmarks/jcsba_solver.py)
+  fused_round_*       — full MFL round wall-clock: split pipeline (solver jit
+                        + host hop + client jit) vs the fused one-program
+                        round, stepwise and under lax.scan, plus the
+                        whole-experiment V-grid sweep
+                        (see benchmarks/fused_round.py)
 """
 from __future__ import annotations
 
@@ -215,6 +220,30 @@ def bench_jcsba_solver(quick: bool):
              f"n_scenarios={r['n_scenarios']};rounds={r['rounds']}")
 
 
+def bench_fused_round(quick: bool):
+    from benchmarks.fused_round import run_benchmark
+    if TINY:
+        out = run_benchmark([4], rounds=2, sweep_rounds=2,
+                            V_grid=[0.1, 1.0, 10.0])
+    elif quick:
+        out = run_benchmark([10, 50], rounds=3, sweep_rounds=5,
+                            V_grid=[0.01, 0.1, 1.0, 10.0])
+    else:
+        out = run_benchmark([10, 50], rounds=5, sweep_rounds=10,
+                            V_grid=[0.001, 0.01, 0.1, 0.5, 1.0, 2.0, 5.0,
+                                    10.0])
+    PAYLOADS["fused_round"] = out
+    for r in out["per_round"]:
+        emit(f"fused_round_{r['dataset']}_K={r['K']}_{r['engine']}",
+             r["ms_per_round"] * 1e3,
+             f"speedup_vs_split={r['speedup_vs_split']}x")
+    s = out["v_sweep"]
+    emit(f"fused_round_vsweep_K={s['K']}",
+         s["wall_s"] / s["total_fused_rounds"] * 1e6,
+         f"rounds_per_sec={s['rounds_per_sec']};n_V={len(s['V_grid'])};"
+         f"rounds={s['rounds']}")
+
+
 def bench_batched_rounds(quick: bool):
     from benchmarks.batched_rounds import run_benchmark
     if TINY:
@@ -254,6 +283,7 @@ def main() -> None:
         "roofline": bench_roofline,
         "batched_rounds": bench_batched_rounds,
         "jcsba_solver": bench_jcsba_solver,
+        "fused_round": bench_fused_round,
     }
     print("name,us_per_call,derived")
     for name, fn in benches.items():

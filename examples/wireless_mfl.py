@@ -23,16 +23,37 @@ def main():
                     help="JCSBA backend: fused jitted batch (jax), float64 "
                          "numpy mirror (np), or the original sequential "
                          "scalar path (seq)")
+    ap.add_argument("--fused", action="store_true",
+                    help="run JCSBA on the fused round engine: whole rounds "
+                         "as one jitted program, scanned in eval_every-sized "
+                         "chunks so the accuracy curve is still recorded "
+                         "(requires --solver jax)")
     ap.add_argument("--out", default="examples/out_wireless_mfl.json")
     args = ap.parse_args()
+    if args.fused and args.solver != "jax":
+        ap.error("--fused requires --solver jax")
 
+    eval_every = 4
     results = {}
     for algo in [args.baseline, "jcsba"]:
-        print(f"=== {algo} ===")
+        fused = args.fused and algo == "jcsba"
+        print(f"=== {algo}{' (fused)' if fused else ''} ===")
         exp = MFLExperiment(dataset=args.dataset, scheduler=algo,
-                            n_samples=args.n_samples, seed=0, eval_every=4,
-                            solver=args.solver)
-        exp.run(args.rounds, verbose=False)
+                            n_samples=args.n_samples, seed=0,
+                            eval_every=eval_every, solver=args.solver,
+                            fused=fused)
+        if fused:
+            # one lax.scan per eval chunk, with chunk boundaries landing on
+            # the t % eval_every == 0 grid (first chunk is a single round)
+            # so the fused curve samples the same rounds as the host loop's
+            done = 0
+            while done < args.rounds:
+                chunk = 1 if done == 0 else min(eval_every,
+                                                args.rounds - done)
+                exp.run_scanned(chunk)
+                done += chunk
+        else:
+            exp.run(args.rounds, verbose=False)
         fin = exp.final_metrics()
         curves = [(r.round, r.metrics.get("multimodal"), r.energy_total)
                   for r in exp.history if r.metrics]

@@ -101,6 +101,60 @@ def aggregate_gradients_stacked(stacked_grads: Mapping[str, object],
     return out
 
 
+# ---------------------------------------------------------------------------
+# Traced twins of the stacked helpers — pure jnp, mask-driven, no host branch.
+# The host helpers above branch on ``w.sum() <= 0`` in Python, which cannot
+# run under jit; these express the same semantics with ``jnp.where`` so the
+# whole Eq. 12 aggregation fuses into the per-round program of the fused
+# round engine (fl/fused_round.py).  Equivalence with the host versions is
+# covered by tests/test_fused_round.py.
+# ---------------------------------------------------------------------------
+def stacked_weights_traced(D, upload_mask: Mapping[str, object]
+                           ) -> Dict[str, object]:
+    """Eq. 12 weights from traced contributor masks: ``upload_mask[m]`` is a
+    bool [K] (traced or concrete); a contributor-free modality keeps its
+    all-zero row, exactly like ``stacked_weights``."""
+    D = jnp.asarray(D, jnp.float32)
+    out = {}
+    for m, mask in upload_mask.items():
+        w = jnp.where(jnp.asarray(mask, bool), D, 0.0)
+        tot = w.sum()
+        out[m] = jnp.where(tot > 0, w / jnp.maximum(tot, 1e-30), w)
+    return out
+
+
+def aggregate_stacked_traced(global_params: Mapping[str, object],
+                             stacked_params: Mapping[str, object],
+                             weights: Mapping[str, object]
+                             ) -> Dict[str, object]:
+    """``aggregate_stacked`` with traced weights: Σ_k w_{k,m} == 0 keeps the
+    global submodel unchanged via ``jnp.where`` instead of a Python branch."""
+    new_global: Dict[str, object] = {}
+    for m, g_sub in global_params.items():
+        if m not in stacked_params:
+            new_global[m] = g_sub
+            continue
+        w = jnp.asarray(weights[m], jnp.float32)
+        has_contrib = w.sum() > 0
+        new_global[m] = jax.tree.map(
+            lambda old, x: jnp.where(has_contrib,
+                                     jnp.tensordot(w, x, axes=1), old),
+            g_sub, stacked_params[m])
+    return new_global
+
+
+def aggregate_gradients_stacked_traced(stacked_grads: Mapping[str, object],
+                                       weights: Mapping[str, object]
+                                       ) -> Dict[str, object]:
+    """Traced twin of ``aggregate_gradients_stacked``.  A contributor-free
+    modality yields an exact-zero aggregate (all weights zero) instead of
+    being omitted — downstream consumers gate on the upload mask."""
+    return {m: jax.tree.map(
+        lambda x: jnp.tensordot(jnp.asarray(weights[m], jnp.float32), x,
+                                axes=1), g)
+        for m, g in stacked_grads.items()}
+
+
 def aggregate(global_params: Mapping[str, object],
               client_params: List[Mapping[str, object]],
               weights: Mapping[str, np.ndarray]) -> Dict[str, object]:

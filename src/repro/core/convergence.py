@@ -196,6 +196,41 @@ class BoundState:
 
 
 # ---------------------------------------------------------------------------
+# Pure jnp twin of BoundState.update_stacked — one modality's ζ/δ refresh as
+# a mask-driven array program, so the tracker update fuses into the per-round
+# program of the fused round engine (fl/fused_round.py).  Same semantics as
+# the host version: rows with real uploads take their measured divergence,
+# stale owners decay toward the fresh mean, and with no uploads at all the
+# state is unchanged.
+# ---------------------------------------------------------------------------
+def tracker_update_masked(zeta_m, delta_m, stacked_g, agg_g, mask, has_m,
+                          staleness: float):
+    """Refresh (ζ_m, δ_{·,m}) from a stacked gradient pytree.
+
+    zeta_m: scalar; delta_m: [K]; ``stacked_g`` leaves carry a leading client
+    axis [K, ...]; ``agg_g`` is the Eq. 9 aggregate (exact zeros when ``mask``
+    is empty); ``mask``/``has_m`` are bool [K] (uploaded this round / owns the
+    modality).  Traced-safe: every branch of the host version becomes a
+    ``jnp.where``."""
+    mask = jnp.asarray(mask, bool)
+    has_m = jnp.asarray(has_m, bool)
+    K = delta_m.shape[0]
+    any_m = mask.any()
+    zeta_new = jnp.sqrt(sum(jnp.vdot(x, x).real
+                            for x in jax.tree.leaves(agg_g)))
+    sq = sum(jnp.square(gs - ga[None]).reshape(K, -1).sum(axis=1)
+             for gs, ga in zip(jax.tree.leaves(stacked_g),
+                               jax.tree.leaves(agg_g)))
+    norms = jnp.sqrt(sq)
+    mean_d = (norms * mask).sum() / jnp.maximum(mask.sum(), 1)
+    decayed = staleness * delta_m + (1.0 - staleness) * mean_d
+    delta_new = jnp.where(mask, norms,
+                          jnp.where(has_m & ~mask, decayed, delta_m))
+    return (jnp.where(any_m, zeta_new, zeta_m),
+            jnp.where(any_m, delta_new, delta_m))
+
+
+# ---------------------------------------------------------------------------
 # Batched jnp port of a1_a2 / objective — the Theorem-1 term for a whole
 # antibody population A ∈ {0,1}^{P×K} as one fused array program.  Used by
 # wireless.solver so the bound fuses into the same jitted JCSBA solve; the

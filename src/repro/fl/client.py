@@ -85,11 +85,15 @@ class PaperModelAdapter:
     # batched round engine: all clients' local updates in one jitted vmap
     # ------------------------------------------------------------------
     @functools.lru_cache(maxsize=8)
-    def _batched_update_fn(self, mods: Tuple[str, ...]):
+    def cohort_step(self, mods: Tuple[str, ...]):
+        """Pure (un-jitted) whole-cohort BGD step over the padded stack.
+
+        The host batched path jits it directly (``_batched_update_fn``); the
+        fused round engine (fl/fused_round.py) inlines it into the single
+        per-round program, so both execute the identical computation."""
         v_weights = {m: self.v_weights.get(m, 1.0) for m in mods}
         eta = self.eta
 
-        @jax.jit
         def step(params, init_params, feats, labels, smask, avail, seeds):
             def one(feats_k, labels_k, smask_k, avail_k, seed_k):
                 rng = jax.random.key(seed_k)
@@ -116,6 +120,10 @@ class PaperModelAdapter:
                 feats, labels, smask, avail, seeds)
 
         return step
+
+    @functools.lru_cache(maxsize=8)
+    def _batched_update_fn(self, mods: Tuple[str, ...]):
+        return jax.jit(self.cohort_step(mods))
 
     def batched_local_update(self, global_params: Mapping[str, dict],
                              init_params: Mapping[str, dict],

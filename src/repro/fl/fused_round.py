@@ -1,0 +1,298 @@
+"""Fully on-device MFL rounds — schedule → local updates → Eq. 12
+aggregation → queue/tracker update as ONE jitted program per round.
+
+PR 1 batched the client fan-out (fl/client.py) and PR 2 batched the server
+decision layer (wireless/solver/), but the runtime still hopped to host
+between them every round: solver jit → host decode → client jit → host
+aggregation → host trackers.  This module chains all four stages inside a
+single ``round_step(carry, xs) -> (carry, aux)`` whose carry packs the entire
+evolving experiment state, so ``lax.scan`` can drive whole experiments (and,
+vmapped, dense V/τ scenario grids — benchmarks/fused_round.py) without
+leaving the device.
+
+Carry layout (``FusedCarry``, a pytree):
+
+* ``params``      — the global multimodal model {modality: subtree};
+* ``warm_a``      — last round's winning antibody (JCSBA warm start);
+* ``Q`` / ``spent`` — Lyapunov virtual energy queues + cumulative energy;
+* ``zeta`` / ``delta`` — the Theorem-1 ζ_m / δ_{k,m} trackers as dense
+  [M] / [M, K] arrays (modality order = ``BoundState.mods``);
+* ``model_dist``  — ‖θ_k − θ⁰‖ bookkeeping (Selection-scheduler parity).
+
+Per-round inputs (``RoundXs``) are the only randomness the loop consumes:
+channel gains, the immune-search PRNG seed and per-client dropout seeds.
+They are pregenerated on host by ``draw_round_xs`` in exactly the order the
+host loop consumes its ``np.random.Generator`` stream (channel draws → solver
+seed → K client seeds — see ``MFLExperiment._draw_client_seeds``), which is
+what makes the fused path draw-for-draw equivalent to the host reference:
+with identical experiment seeds, participant sets match exactly and params /
+queues / trackers match to float32 reduction-order tolerance
+(tests/test_fused_round.py locks this contract).
+
+Equivalence caveats (all covered by the tests' tolerances): the host loop
+keeps queues/trackers in float64 numpy between the f32 jitted stages, while
+the fused carry stays f32 end-to-end — per-round drift is ~1e-7 relative and
+does not move the solver's argmin on the tested configs.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from ..core import aggregation as agg
+from ..core.convergence import tracker_update_masked
+from ..wireless.lyapunov import queue_update
+from ..wireless.solver import SolverHyper, build_solver_data
+from ..wireless.solver.common import B_LO
+from ..wireless.solver.jaxsolver import rate, solve_core, to_device
+
+
+class FusedCarry(NamedTuple):
+    """Whole-experiment state threaded through ``lax.scan``."""
+    params: Dict[str, Any]
+    warm_a: jax.Array           # [K] bool
+    Q: jax.Array                # [K]
+    spent: jax.Array            # [K]
+    zeta: jax.Array             # [M]
+    delta: jax.Array            # [M, K]
+    model_dist: jax.Array       # [K]
+
+
+class RoundXs(NamedTuple):
+    """Pregenerated per-round randomness (stack leading axis to scan)."""
+    h: jax.Array                # [K] channel gains (float32)
+    draw_seed: jax.Array        # scalar uint32 — immune-search key seed
+    client_seeds: jax.Array     # [K] uint32 — per-client dropout seeds
+
+
+class RoundAux(NamedTuple):
+    """Per-round outputs — the traced stand-in for ScheduleDecision +
+    RoundRecord, decoded on host by ``MFLExperiment._decode_fused_round``."""
+    a: jax.Array                # [K] bool — scheduled (incl. failures)
+    ok: jax.Array               # [K] bool — participated
+    J: jax.Array                # scalar solver objective J₂(a*)
+    weights: Dict[str, jax.Array]   # Eq. 12 weights w^t_{k,m}
+    energy_total: jax.Array     # scalar Σ_k cumulative energy after round
+
+
+def draw_round_xs(exp, rounds: int) -> RoundXs:
+    """Consume ``rounds`` rounds of the experiment's host randomness in the
+    canonical order — one host-loop round exactly: K channel draws
+    (``Channel.draw``), one solver seed (the ``rng.integers(2 ** 31)`` in
+    ``JCSBAScheduler.schedule``), then the per-client dropout seeds via the
+    experiment's own ``_draw_client_seeds`` so that contract stays
+    single-sourced.  A fused experiment and a host-loop experiment sharing
+    the same seed therefore walk the identical ``np.random`` stream."""
+    K = exp.params.K
+    h = np.empty((rounds, K), np.float32)
+    draw = np.empty(rounds, np.uint32)
+    cseed = np.empty((rounds, K), np.uint32)
+    for t in range(rounds):
+        h[t] = exp.channel.draw()
+        draw[t] = exp.rng.integers(2 ** 31)
+        cseed[t] = exp._draw_client_seeds()
+    return RoundXs(jnp.asarray(h), jnp.asarray(draw), jnp.asarray(cseed))
+
+
+class FusedRoundEngine:
+    """Per-experiment compiler/runner for the fused round program.
+
+    Built lazily by ``MFLExperiment`` (fused=True).  Holds the static,
+    device-resident context — padded cohort stack, per-client costs, solver
+    template, tracker constants — and exposes:
+
+    * ``step(carry, xs)``  — one jitted round;
+    * ``scan(carry, xs)``  — R rounds under one ``lax.scan`` (xs stacked);
+    * ``init_carry()`` / ``export_carry()`` — host-state ↔ carry conversion.
+
+    ``trace_count`` increments each time the round body is *traced* — the
+    zero-host-round-trips contract is asserted as "many rounds, one trace"
+    in tests/test_fused_round.py.
+    """
+
+    def __init__(self, exp):
+        if exp.scheduler.name != "jcsba" or exp.scheduler.solver != "jax":
+            raise ValueError("fused rounds require scheduler='jcsba', "
+                             "solver='jax'")
+        self.exp = exp
+        self.K = exp.params.K
+        self.mods = list(exp.bound.mods)
+        self.hp = SolverHyper(**exp.scheduler.immune_kwargs)
+        self.V = exp.scheduler.V
+        self.staleness = float(exp.bound.staleness)
+        self.trace_count = 0
+
+        # solver-data template: static entries live on device once; Q/h and
+        # the ζ²/δ² snapshot are overwritten from the carry every round
+        tmpl = build_solver_data(np.zeros(self.K), np.zeros(self.K),
+                                 exp.cost, exp.params, exp.bound, self.V)
+        self._solver_tmpl = to_device(tmpl)
+        self._has = self._solver_tmpl["has"]            # [M, K] bool
+        self._D = self._solver_tmpl["D"]                # [K] f32
+        self._tau_cmp = jnp.asarray(exp.cost.tau_cmp, jnp.float32)
+        self._e_cmp = jnp.asarray(exp.cost.e_cmp, jnp.float32)
+        p = exp.params
+        self._tau_max = float(p.tau_max)
+        self._E_add = float(p.E_add)
+        self._p_tx = float(p.p_tx)
+        self._N0 = float(p.N0)
+
+        feats, labels, smask = exp._get_stacked()
+        self._feats = {m: feats[m] for m in self.mods}
+        self._labels, self._smask = labels, smask
+        self._init_params = jax.tree.map(jnp.asarray, exp.init_params)
+        self._cohort = exp.adapter.cohort_step(tuple(self.mods))
+
+        self._jit_step = jax.jit(self._round_step)
+        self._jit_scan = jax.jit(self._scan_steps)
+        self._jit_vsweep = jax.jit(jax.vmap(self._scan_one_v,
+                                            in_axes=(0, None, None)))
+
+    # ------------------------------------------------------------------
+    # host state ↔ carry
+    # ------------------------------------------------------------------
+    def init_carry(self) -> FusedCarry:
+        exp = self.exp
+        warm = exp.scheduler._last_a
+        warm = (np.zeros(self.K, bool) if warm is None
+                else np.asarray(warm, bool))
+        f32 = lambda x: jnp.asarray(x, jnp.float32)     # noqa: E731
+        return FusedCarry(
+            params=jax.tree.map(jnp.asarray, exp.global_params),
+            warm_a=jnp.asarray(warm),
+            Q=f32(exp.queues.Q), spent=f32(exp.queues.spent),
+            zeta=f32([exp.bound.zeta[m] for m in self.mods]),
+            delta=f32(np.stack([exp.bound.delta[m] for m in self.mods])),
+            model_dist=f32(exp.model_dist))
+
+    def export_carry(self, carry: FusedCarry) -> None:
+        """Write the carry back into the host-side mirrors (checkpointing,
+        final_metrics, interop with the non-fused paths)."""
+        exp = self.exp
+        exp.global_params = carry.params
+        exp.queues.Q = np.asarray(carry.Q, np.float64)
+        exp.queues.spent = np.asarray(carry.spent, np.float64)
+        exp.queues.t = exp._round
+        for i, m in enumerate(self.mods):
+            exp.bound.zeta[m] = float(carry.zeta[i])
+            exp.bound.delta[m] = np.asarray(carry.delta[i], np.float64)
+        exp.model_dist = np.asarray(carry.model_dist, np.float64)
+        exp.scheduler._last_a = np.asarray(carry.warm_a, bool)
+
+    # ------------------------------------------------------------------
+    # the fused program
+    # ------------------------------------------------------------------
+    def _round_step(self, carry: FusedCarry, xs: RoundXs, overrides=None):
+        self.trace_count += 1
+
+        # 1. server decision: population-batched JCSBA (Algorithm 2 + P4.2')
+        data = dict(self._solver_tmpl)
+        if overrides:
+            data.update(overrides)      # e.g. a vmapped V for scenario sweeps
+        data["Q"], data["h"] = carry.Q, xs.h
+        data["zeta2"] = jnp.square(carry.zeta)
+        data["delta2"] = jnp.square(carry.delta)
+        seeds2 = jnp.stack([carry.warm_a, jnp.zeros_like(carry.warm_a)])
+        a, J, B = solve_core(data, seeds2,
+                             jax.random.PRNGKey(xs.draw_seed), self.hp)
+
+        # 2. latency feasibility (C4): scheduled-but-late ⇒ failure — energy
+        # is spent, nothing is uploaded
+        r = rate(jnp.maximum(B, B_LO), xs.h, self._p_tx, self._N0)
+        tcom = jnp.where(a, data["gamma"] / jnp.maximum(r, 1e-30), 0.0)
+        ok = a & (tcom + self._tau_cmp <= self._tau_max + 1e-12)
+
+        # 3. masked whole-cohort BGD updates (Eq. 7) — JCSBA never drops a
+        # modality, so the upload mask is participation ∧ ownership.  An
+        # empty round skips the BGD entirely (lax.cond), mirroring the host
+        # loop's early return: with every client masked the cohort's outputs
+        # are exactly the broadcast globals + zero gradients anyway, so the
+        # skip branch is bit-identical and costs only the solver.
+        upload = {m: ok & self._has[i] for i, m in enumerate(self.mods)}
+        avail = {m: upload[m].astype(jnp.float32) for m in self.mods}
+
+        def run_cohort(args):
+            params, avail, seeds = args
+            newp, grads, _totals, dist_sq = self._cohort(
+                params, self._init_params, self._feats, self._labels,
+                self._smask, avail, seeds)
+            return newp, grads, dist_sq
+
+        def skip_cohort(args):
+            params, _avail, _seeds = args
+            newp = jax.tree.map(
+                lambda p: jnp.broadcast_to(p, (self.K,) + p.shape), params)
+            return (newp, jax.tree.map(jnp.zeros_like, newp),
+                    {m: jnp.zeros(self.K, jnp.float32) for m in self.mods})
+
+        newp, grads, dist_sq = lax.cond(
+            ok.any(), run_cohort, skip_cohort,
+            (carry.params, avail, xs.client_seeds))
+
+        # 4. Eq. 12 aggregation + ζ/δ tracker refresh
+        w = agg.stacked_weights_traced(self._D, upload)
+        new_params = agg.aggregate_stacked_traced(carry.params, newp, w)
+        agg_grads = agg.aggregate_gradients_stacked_traced(grads, w)
+        zs, ds = [], []
+        for i, m in enumerate(self.mods):
+            z_m, d_m = tracker_update_masked(
+                carry.zeta[i], carry.delta[i], grads[m], agg_grads[m],
+                upload[m], self._has[i], self.staleness)
+            zs.append(z_m)
+            ds.append(d_m)
+
+        # 5. Lyapunov queue recursion (§V-A) + energy accounting
+        used = a.astype(jnp.float32) * (self._p_tx * tcom + self._e_cmp)
+        Qn = queue_update(carry.Q, used, self._E_add)
+        spent = carry.spent + used
+
+        # 6. ‖θ_k − θ⁰‖ for participants (Selection-scheduler bookkeeping)
+        d_sq = sum(dist_sq[m] * avail[m] for m in self.mods)
+        model_dist = jnp.where(ok, jnp.sqrt(d_sq), carry.model_dist)
+
+        new_carry = FusedCarry(new_params, a, Qn, spent,
+                               jnp.stack(zs), jnp.stack(ds), model_dist)
+        aux = RoundAux(a, ok, J, w, spent.sum())
+        return new_carry, aux
+
+    def _scan_steps(self, carry: FusedCarry, xs: RoundXs):
+        return lax.scan(self._round_step, carry, xs)
+
+    # ------------------------------------------------------------------
+    def step(self, carry: FusedCarry, xs: RoundXs):
+        return self._jit_step(carry, xs)
+
+    def scan(self, carry: FusedCarry, xs: RoundXs):
+        """R rounds in one program; xs leaves carry a leading [R] axis.
+        Compiles once per distinct R (then cached)."""
+        return self._jit_scan(carry, xs)
+
+    def _scan_one_v(self, V, carry: FusedCarry, xs: RoundXs):
+        def body(c, x):
+            return self._round_step(c, x, overrides={"V": V})
+        return lax.scan(body, carry, xs)
+
+    def scan_v_grid(self, V_grid, carry: FusedCarry, xs: RoundXs):
+        """Whole *experiments* vmapped over a drift-penalty grid: every V in
+        ``V_grid`` runs the full R-round experiment (same initial carry, same
+        channel/dropout randomness — the paper's Fig.-4 controlled V study)
+        under one ``jit(vmap(scan))``.  Returns (final carries, auxs) with a
+        leading [len(V_grid)] axis.  This is the dense V-frontier workload
+        the split pipeline cannot express without n_V × R host round-trips."""
+        return self._jit_vsweep(jnp.asarray(V_grid, jnp.float32), carry, xs)
+
+    # ------------------------------------------------------------------
+    def run(self, carry: FusedCarry, xs: RoundXs, scanned: bool):
+        """Execute and time; returns (carry, aux-on-host, wall seconds)."""
+        t0 = time.perf_counter()
+        if scanned:
+            carry, aux = self.scan(carry, xs)
+        else:
+            carry, aux = self.step(carry, xs)
+        aux = jax.tree.map(np.asarray, jax.block_until_ready(aux))
+        return carry, aux, time.perf_counter() - t0

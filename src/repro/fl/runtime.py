@@ -39,6 +39,19 @@ round — not the client — the unit of compute:
   sequential paths produce identical Eq. 12 weights and globally aggregated
   params up to float32 reduction order (tests/test_batched_equivalence.py).
   The sequential loop is kept behind ``batched=False`` for exactly this A/B.
+
+Fused round engine (``fused=True``)
+-----------------------------------
+The batched engine still hops to host between the jitted solver and the
+jitted client stage every round.  ``fused=True`` (requires
+``scheduler="jcsba"``, ``solver="jax"``) runs the *whole* round — steps 1-5
+above — as one jitted program (fl/fused_round.py): ``run_round`` becomes a
+thin host wrapper that pregenerates the round's randomness, calls the fused
+step and decodes the traced schedule arrays into a JSON-safe RoundRecord;
+``run_scanned(R)`` drives R rounds under a single ``lax.scan``.  Per-round
+host rng consumption is static (see ``_draw_client_seeds``), so all three
+engines consume the identical stream and stay equivalent round by round
+(tests/test_fused_round.py).
 """
 from __future__ import annotations
 
@@ -62,8 +75,20 @@ from .client import PaperModelAdapter
 
 
 def jnp_or_np(x):
-    import jax.numpy as jnp
-    return jnp.asarray(x)
+    """Record/JSON-boundary normalizer: accepts jnp OR np values (e.g. fields
+    produced under jit) and returns plain Python objects — 0-d arrays become
+    scalars, 1-d+ arrays become lists, containers recurse.  Every
+    ``RoundRecord`` is built through this so device arrays never leak into
+    ``json.dump`` of histories or checkpoint manifests (regression test in
+    tests/test_fused_round.py)."""
+    if isinstance(x, dict):
+        return {k: jnp_or_np(v) for k, v in x.items()}
+    if isinstance(x, (list, tuple)):
+        return [jnp_or_np(v) for v in x]
+    if hasattr(x, "ndim"):
+        x = np.asarray(x)
+        return x.item() if x.ndim == 0 else x.tolist()
+    return x
 
 
 @dataclasses.dataclass
@@ -75,6 +100,18 @@ class RoundRecord:
     metrics: Dict[str, float]
     sched_time_s: float
 
+    @classmethod
+    def make(cls, round, participants, failures, energy_total, metrics,
+             sched_time_s) -> "RoundRecord":
+        """The one constructor both round engines use — normalizes every
+        field through ``jnp_or_np`` so records are always JSON-safe."""
+        return cls(int(jnp_or_np(round)),
+                   [int(v) for v in jnp_or_np(list(participants))],
+                   [int(v) for v in jnp_or_np(list(failures))],
+                   float(jnp_or_np(energy_total)),
+                   {k: float(jnp_or_np(v)) for k, v in metrics.items()},
+                   float(jnp_or_np(sched_time_s)))
+
 
 class MFLExperiment:
     def __init__(self, dataset: str = "crema_d", scheduler: str = "jcsba",
@@ -83,11 +120,17 @@ class MFLExperiment:
                  params: Optional[WirelessParams] = None,
                  scheduler_kwargs: Optional[dict] = None,
                  eval_every: int = 1, batched: bool = True,
-                 solver: str = "jax"):
+                 solver: str = "jax", fused: bool = False):
         self.rng = np.random.default_rng(seed)
         self.params = params or WirelessParams(K=K)
         self.eval_every = eval_every
         self.batched = batched
+        self.fused = fused
+        if fused and (scheduler != "jcsba" or solver != "jax"):
+            raise ValueError("fused=True requires scheduler='jcsba' and "
+                             "solver='jax' (the fully on-device round)")
+        self._fused_engine = None           # built lazily (fl/fused_round.py)
+        self._carry = None                  # FusedCarry when fused
         self._stacked_dev = None            # device-resident client stack
         self._stacked_src = None            # cohort it was built from
 
@@ -123,6 +166,8 @@ class MFLExperiment:
 
     # ------------------------------------------------------------------
     def run_round(self) -> RoundRecord:
+        if self.fused:
+            return self._run_round_fused()
         t = self._round
         K = self.params.K
         h = self.channel.draw()
@@ -141,10 +186,11 @@ class MFLExperiment:
         participants = sorted(np.flatnonzero(ok))
 
         # --- local updates + aggregation (Eq. 12) + trackers ---
+        seeds = self._draw_client_seeds()
         if self.batched:
-            w_t = self._round_batched(dec, participants)
+            w_t = self._round_batched(dec, participants, seeds)
         else:
-            w_t = self._round_sequential(dec, participants)
+            w_t = self._round_sequential(dec, participants, seeds)
         self.last_weights = w_t
         self.queues.step(dec.a.astype(float), ecom, self.cost.e_cmp,
                          self.params.E_add)
@@ -152,17 +198,104 @@ class MFLExperiment:
         metrics = {}
         if t % self.eval_every == 0:
             metrics = self.adapter.evaluate(self.global_params, self.test_ds)
-        rec = RoundRecord(t, list(map(int, participants)),
-                          list(map(int, failures)),
-                          float(self.queues.spent.sum()), metrics, sched_time)
+        rec = RoundRecord.make(t, participants, failures,
+                               self.queues.spent.sum(), metrics, sched_time)
         self.history.append(rec)
         self._round += 1
         return rec
 
     # ------------------------------------------------------------------
+    # fused engine (fl/fused_round.py): the whole round as one jitted program
+    # ------------------------------------------------------------------
+    def _get_fused_engine(self):
+        if self._fused_engine is None:
+            from .fused_round import FusedRoundEngine
+            self._fused_engine = FusedRoundEngine(self)
+        if self._carry is None:
+            self._carry = self._fused_engine.init_carry()
+        return self._fused_engine
+
+    def _decode_fused_round(self, t: int, aux, sched_time: float,
+                            with_metrics: bool) -> RoundRecord:
+        """Host-side decoder: traced schedule/energy arrays → RoundRecord."""
+        a = np.asarray(aux.a, bool)
+        ok = np.asarray(aux.ok, bool)
+        self.last_weights = {m: np.asarray(aux.weights[m])
+                             for m in self.all_mods}
+        metrics = {}
+        if with_metrics:
+            metrics = self.adapter.evaluate(self._carry.params, self.test_ds)
+        return RoundRecord.make(t, sorted(np.flatnonzero(ok)),
+                                sorted(np.flatnonzero(a & ~ok)),
+                                aux.energy_total, metrics, sched_time)
+
+    def _run_round_fused(self) -> RoundRecord:
+        # note: the record's sched_time_s holds the WHOLE fused-step wall
+        # time (the stages are inseparable inside one program; round 0
+        # includes jit compilation) — the host path times only the scheduler
+        from .fused_round import draw_round_xs
+        eng = self._get_fused_engine()
+        xs = draw_round_xs(self, 1)
+        xs = jax.tree.map(lambda x: x[0], xs)
+        self._carry, aux, wall = eng.run(self._carry, xs, scanned=False)
+        rec = self._decode_fused_round(
+            self._round, aux, wall,
+            with_metrics=self._round % self.eval_every == 0)
+        self.history.append(rec)
+        self._round += 1
+        # keep the public host-side mirrors (global_params, queues, bound,
+        # model_dist) live — a device->host copy, not a round-trip: the
+        # carry stays the compute chain's source of truth
+        eng.export_carry(self._carry)
+        return rec
+
+    def run_scanned(self, rounds: int) -> List[RoundRecord]:
+        """R rounds under a single ``lax.scan`` — one device program for the
+        whole stretch.  Per-round randomness is pregenerated in the canonical
+        stream order, so the result is identical to R ``run_round()`` calls
+        (asserted bit-for-bit in tests/test_system.py).  Differences from the
+        host loop: test metrics are evaluated only when the *final* scanned
+        round lands on the ``eval_every`` grid (intermediate global params
+        never materialise on host — chunk scans so boundaries hit the grid to
+        build an eval curve, as examples/wireless_mfl.py does) and
+        ``sched_time_s`` records the mean per-round wall time of the whole
+        fused scan (compile included on the first call), not the host path's
+        scheduler-only time."""
+        if not self.fused:
+            raise RuntimeError("run_scanned requires fused=True")
+        from .fused_round import draw_round_xs
+        eng = self._get_fused_engine()
+        xs = draw_round_xs(self, rounds)
+        self._carry, auxs, wall = eng.run(self._carry, xs, scanned=True)
+        start, per = self._round, wall / max(rounds, 1)
+        recs = []
+        for i in range(rounds):
+            aux = jax.tree.map(lambda x: x[i], auxs)
+            recs.append(self._decode_fused_round(
+                start + i, aux, per,
+                with_metrics=(i == rounds - 1 and
+                              (start + i) % self.eval_every == 0)))
+        self.history.extend(recs)
+        self._round += rounds
+        eng.export_carry(self._carry)     # host mirrors stay live (see above)
+        return recs
+
+    # ------------------------------------------------------------------
     # local-update fan-out: sequential (reference) vs batched (default)
     # ------------------------------------------------------------------
-    def _round_sequential(self, dec, participants) -> Dict[str, np.ndarray]:
+    def _draw_client_seeds(self) -> np.ndarray:
+        """One dropout seed per client, every round, scheduled or not.
+
+        The consumption pattern is *static* (K scalar draws per round), so the
+        np-rng stream is independent of the schedule outcome — which lets the
+        fused round engine (fl/fused_round.py) pregenerate the whole stream
+        for a ``lax.scan`` over rounds while staying draw-for-draw identical
+        to the host loop.  Client k always uses ``seeds[k]``."""
+        return np.array([self.rng.integers(2 ** 31)
+                         for _ in range(self.params.K)], np.uint32)
+
+    def _round_sequential(self, dec, participants,
+                          seeds: np.ndarray) -> Dict[str, np.ndarray]:
         """Reference path: one JAX re-entry per scheduled client."""
         K = self.params.K
         client_params: List[Optional[dict]] = [None] * K
@@ -170,7 +303,7 @@ class MFLExperiment:
         for k in participants:
             drop = (dec.dropout_modality[k]
                     if dec.dropout_modality is not None else None)
-            rng = jax.random.key(int(self.rng.integers(2 ** 31)))
+            rng = jax.random.key(int(seeds[k]))
             newp, grads, _ = self.adapter.local_update(
                 self.global_params, self.clients[k], rng, drop)
             client_params[k] = newp
@@ -191,7 +324,8 @@ class MFLExperiment:
         self.bound.update(client_grads, agg_grads)
         return w_t
 
-    def _round_batched(self, dec, participants) -> Dict[str, np.ndarray]:
+    def _round_batched(self, dec, participants,
+                       seeds: np.ndarray) -> Dict[str, np.ndarray]:
         """Batched path: the whole cohort's updates in one jitted vmap."""
         K = self.params.K
         upload = {m: np.zeros(K, bool) for m in self.all_mods}
@@ -205,11 +339,6 @@ class MFLExperiment:
                 upload[m][k] = True
         if not len(participants):
             return agg.stacked_weights(self.data_sizes, upload)
-
-        # same np-rng consumption (and per-client keys) as the sequential loop
-        seeds = np.zeros(K, np.uint32)
-        for k in participants:
-            seeds[k] = self.rng.integers(2 ** 31)
 
         feats, labels, smask = self._get_stacked()
         newp, grads, _totals, dist_sq = self.adapter.batched_local_update(
@@ -262,12 +391,19 @@ class MFLExperiment:
     # ------------------------------------------------------------------
     def save(self, path: str) -> str:
         from ..checkpoint import save_checkpoint
+        if self.fused and self._carry is not None:
+            # the carry is authoritative mid-fused-experiment: mirror it back
+            # into the host-side state the checkpoint schema reads
+            self._fused_engine.export_carry(self._carry)
+        warm = getattr(self.scheduler, "_last_a", None)
         state = {
             "global_params": self.global_params,
             "queues_Q": self.queues.Q,
             "queues_spent": self.queues.spent,
             "delta": {m: self.bound.delta[m] for m in self.all_mods},
             "model_dist": self.model_dist,
+            "warm_a": (np.zeros(self.params.K, bool) if warm is None
+                       else np.asarray(warm, bool)),
         }
         meta = {"round": self._round,
                 "zeta": {m: float(self.bound.zeta[m]) for m in self.all_mods},
@@ -275,10 +411,11 @@ class MFLExperiment:
         return save_checkpoint(path, state, step=self._round, metadata=meta)
 
     def restore(self, path: str) -> int:
+        import jax.numpy as jnp
         from ..checkpoint import load_checkpoint
         state, manifest = load_checkpoint(path)
         self.global_params = jax.tree.map(
-            jnp_or_np, state["global_params"])
+            jnp.asarray, state["global_params"])
         self.queues.Q = np.asarray(state["queues_Q"])
         self.queues.spent = np.asarray(state["queues_spent"])
         self.queues.t = manifest["metadata"]["queues_t"]
@@ -286,7 +423,16 @@ class MFLExperiment:
             self.bound.delta[m] = np.asarray(state["delta"][m])
             self.bound.zeta[m] = manifest["metadata"]["zeta"][m]
         self.model_dist = np.asarray(state["model_dist"])
+        warm = state.get("warm_a")
+        if warm is not None and hasattr(self.scheduler, "_last_a"):
+            # an all-zeros warm row is indistinguishable from "no winner yet"
+            # after _seed_antibodies padding, so a plain array restore is exact
+            self.scheduler._last_a = np.asarray(warm, bool)
         self._round = manifest["step"]
+        if self.fused:
+            # rebuild the fused carry from the restored host state
+            self._carry = None
+            self._get_fused_engine()
         return self._round
 
     # ------------------------------------------------------------------

@@ -44,9 +44,14 @@ def to_device(data: dict) -> dict:
 # ---------------------------------------------------------------------------
 # physics: rate / φ / B_min — fixed-bracket bisections (see common docstring)
 # ---------------------------------------------------------------------------
-def _rate(B, h, p_tx, N0):
+def rate(B, h, p_tx, N0):
+    """Shannon/FDMA uplink rate r(B) (Eq. 13), jnp.  Public: the fused round
+    engine and the sweep drivers reuse it for post-solve latency/energy."""
     x = p_tx * h / (B * N0)
     return B * jnp.log1p(x) / LN2
+
+
+_rate = rate        # internal alias used throughout the bisection stack
 
 
 def _phi(B, Q, gamma, h, p_tx, N0):

@@ -1,0 +1,95 @@
+"""Property tests for the fused round engine's state algebra.
+
+Runs under real ``hypothesis`` when installed, else under the deterministic
+shim in tests/_hypothesis_fallback.py (registered by conftest).  Properties:
+
+* Lyapunov queues stay non-negative under any recursion of
+  ``lyapunov.queue_update`` (numpy and jnp backends agree);
+* ``ClientCost.tau_residual`` is monotone in τ_max (the In1 budget can only
+  grow with the latency budget);
+* the fused carry round-trips through tree flatten/unflatten unchanged — the
+  structural invariant ``lax.scan`` relies on.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.fl.fused_round import FusedCarry, RoundAux, RoundXs
+from repro.wireless.cost import ClientCost
+from repro.wireless.lyapunov import queue_update
+from repro.wireless.params import WirelessParams
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 32), st.integers(0, 2 ** 31 - 1),
+       st.floats(0.0, 0.1))
+def test_queue_update_nonnegative_recursion(K, seed, E_add):
+    rng = np.random.default_rng(seed)
+    Q = rng.uniform(0, 1.0, K)
+    for _ in range(5):
+        used = rng.uniform(0, 0.5, K) * rng.integers(0, 2, K)
+        Qn = np.asarray(queue_update(Q, used, E_add))
+        assert (Qn >= 0).all()
+        np.testing.assert_allclose(Qn, np.maximum(Q - (E_add - used), 0))
+        # backend-agnostic: jnp recursion matches numpy to f32 tolerance
+        Qj = queue_update(jnp.asarray(Q, jnp.float32),
+                          jnp.asarray(used, jnp.float32), E_add)
+        np.testing.assert_allclose(np.asarray(Qj), Qn, rtol=1e-5, atol=1e-6)
+        Q = Qn
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 16), st.integers(0, 2 ** 31 - 1),
+       st.floats(1e-4, 0.05), st.floats(0.0, 0.05))
+def test_tau_residual_monotone_in_tau_max(K, seed, tau_lo, tau_gap):
+    rng = np.random.default_rng(seed)
+    cost = ClientCost(gamma_bits=rng.uniform(1e5, 1e6, K),
+                      tau_cmp=rng.uniform(0, 0.02, K),
+                      e_cmp=rng.uniform(0, 0.01, K))
+    lo = cost.tau_residual(WirelessParams(tau_max=tau_lo))
+    hi = cost.tau_residual(WirelessParams(tau_max=tau_lo + tau_gap))
+    assert (hi >= lo).all()
+    np.testing.assert_allclose(hi - lo, tau_gap, atol=1e-12)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 8), st.integers(1, 3), st.integers(0, 2 ** 31 - 1))
+def test_fused_carry_tree_roundtrip(K, M, seed):
+    rng = np.random.default_rng(seed)
+    mods = [f"m{i}" for i in range(M)]
+    carry = FusedCarry(
+        params={m: {"w": jnp.asarray(rng.normal(size=(4, 2)), jnp.float32),
+                    "b": jnp.asarray(rng.normal(size=(2,)), jnp.float32)}
+                for m in mods},
+        warm_a=jnp.asarray(rng.integers(0, 2, K), bool),
+        Q=jnp.asarray(rng.uniform(0, 1, K), jnp.float32),
+        spent=jnp.asarray(rng.uniform(0, 1, K), jnp.float32),
+        zeta=jnp.asarray(rng.uniform(0, 2, M), jnp.float32),
+        delta=jnp.asarray(rng.uniform(0, 1, (M, K)), jnp.float32),
+        model_dist=jnp.asarray(rng.uniform(0, 1, K), jnp.float32))
+    leaves, treedef = jax.tree_util.tree_flatten(carry)
+    rebuilt = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert isinstance(rebuilt, FusedCarry)
+    assert jax.tree_util.tree_structure(rebuilt) == treedef
+    for a, b in zip(jax.tree.leaves(carry), jax.tree.leaves(rebuilt)):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # identity-mapping through jax.tree.map preserves the NamedTuple type
+    mapped = jax.tree.map(lambda x: x, carry)
+    assert isinstance(mapped, FusedCarry)
+
+
+def test_round_pytrees_scan_compatible():
+    """RoundXs/RoundAux slice along a leading axis like lax.scan needs."""
+    K, R = 4, 3
+    xs = RoundXs(h=jnp.zeros((R, K)), draw_seed=jnp.zeros(R, jnp.uint32),
+                 client_seeds=jnp.zeros((R, K), jnp.uint32))
+    x0 = jax.tree.map(lambda x: x[0], xs)
+    assert isinstance(x0, RoundXs) and x0.h.shape == (K,)
+    aux = RoundAux(a=jnp.zeros(K, bool), ok=jnp.zeros(K, bool),
+                   J=jnp.float32(0), weights={"m": jnp.zeros(K)},
+                   energy_total=jnp.float32(0))
+    stacked = jax.tree.map(lambda x: jnp.stack([x, x]), aux)
+    assert isinstance(stacked, RoundAux)
+    assert stacked.weights["m"].shape == (2, K)

@@ -1,0 +1,127 @@
+"""Contract tests for the fused round engine (fl/fused_round.py).
+
+With identical experiment seeds the fused ``round_step`` and the host-loop
+reference (both ``batched=True`` and ``batched=False``) must produce the same
+per-round participant sets, the same aggregated params to float32
+reduction-order tolerance, and matching queue / ζ-δ tracker state over ≥5
+rounds — the fused path's contract.  Also locks the zero-host-round-trips
+property (one trace for many rounds) and the JSON-safety of records built
+from device arrays.
+"""
+import dataclasses
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.fl.runtime import MFLExperiment, RoundRecord, jnp_or_np
+
+CFG = dict(scheduler="jcsba", n_samples=200, seed=3, eval_every=100)
+
+
+def _fused_vs_host(dataset, batched, rounds=5):
+    host = MFLExperiment(dataset=dataset, batched=batched, **CFG)
+    fus = MFLExperiment(dataset=dataset, fused=True, **CFG)
+    host.run(rounds)
+    fus.run(rounds)
+    return host, fus
+
+
+def _assert_equivalent(host, fus):
+    # identical rng-stream consumption ⇒ identical schedules round by round
+    for ra, rb in zip(host.history, fus.history):
+        assert ra.participants == rb.participants
+        assert ra.failures == rb.failures
+    # Eq. 12 weights of the last round
+    for m in host.all_mods:
+        np.testing.assert_allclose(host.last_weights[m],
+                                   fus.last_weights[m], atol=1e-6)
+    # aggregated global params within float32 reduction-order tolerance
+    for a, b in zip(jax.tree.leaves(host.global_params),
+                    jax.tree.leaves(fus._carry.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+    # Lyapunov queues + cumulative energy
+    np.testing.assert_allclose(host.queues.Q,
+                               np.asarray(fus._carry.Q, np.float64),
+                               rtol=1e-5, atol=1e-9)
+    np.testing.assert_allclose(host.queues.spent,
+                               np.asarray(fus._carry.spent, np.float64),
+                               rtol=1e-5, atol=1e-9)
+    # Theorem-1 bound trackers
+    for i, m in enumerate(fus._fused_engine.mods):
+        assert host.bound.zeta[m] == pytest.approx(
+            float(fus._carry.zeta[i]), abs=1e-3)
+        np.testing.assert_allclose(host.bound.delta[m],
+                                   np.asarray(fus._carry.delta[i]),
+                                   atol=1e-4)
+    np.testing.assert_allclose(host.model_dist,
+                               np.asarray(fus._carry.model_dist), atol=1e-4)
+
+
+def test_fused_matches_batched_host_loop_iemocap():
+    host, fus = _fused_vs_host("iemocap", batched=True)
+    _assert_equivalent(host, fus)
+
+
+def test_fused_matches_sequential_host_loop_crema():
+    host, fus = _fused_vs_host("crema_d", batched=False)
+    _assert_equivalent(host, fus)
+
+
+def test_fused_round_compiles_once():
+    """Zero host round-trips in steady state: many rounds, ONE trace of the
+    fused program (the jit cache serves every subsequent round)."""
+    fus = MFLExperiment(dataset="iemocap", fused=True, **CFG)
+    fus.run(6)
+    assert fus._fused_engine.trace_count == 1
+
+
+def test_fused_requires_jcsba_jax_solver():
+    with pytest.raises(ValueError):
+        MFLExperiment(dataset="iemocap", scheduler="random", fused=True)
+    with pytest.raises(ValueError):
+        MFLExperiment(dataset="iemocap", scheduler="jcsba", solver="seq",
+                      fused=True)
+
+
+# ---------------------------------------------------------------------------
+# record boundary: device arrays must never leak into JSON
+# ---------------------------------------------------------------------------
+def test_jnp_or_np_normalizes_device_values():
+    import jax.numpy as jnp
+    assert jnp_or_np(jnp.float32(1.5)) == 1.5
+    assert jnp_or_np(jnp.arange(3)) == [0, 1, 2]
+    assert jnp_or_np(np.float64(2.0)) == 2.0
+    assert jnp_or_np({"a": jnp.int32(7), "b": [np.int64(1)]}) == \
+        {"a": 7, "b": [1]}
+    assert jnp_or_np("plain") == "plain"
+
+
+def test_round_record_json_safe_under_jit():
+    """Regression: RoundRecord fields produced by the fused (jitted) round
+    used to be device arrays; json.dump of a history must work."""
+    import jax.numpy as jnp
+    fus = MFLExperiment(dataset="iemocap", fused=True, **CFG)
+    rec = fus.run_round()
+    blob = json.dumps(dataclasses.asdict(rec))          # must not raise
+    assert isinstance(rec.energy_total, float)
+    assert all(isinstance(p, int) for p in rec.participants)
+    assert "round" in blob
+    # the constructor normalizes raw device arrays too
+    rec2 = RoundRecord.make(jnp.int32(3), jnp.asarray([1, 2]), [],
+                            jnp.float32(0.5), {"loss": jnp.float32(1.0)}, 0.0)
+    json.dumps(dataclasses.asdict(rec2))
+    assert rec2.participants == [1, 2] and rec2.metrics["loss"] == 1.0
+
+
+def test_fused_checkpoint_manifest_json_safe(tmp_path):
+    """save() mid-fused-experiment writes a manifest whose metadata came from
+    the device carry — the JSON dump inside save_checkpoint must succeed and
+    reload with float zeta values."""
+    fus = MFLExperiment(dataset="iemocap", fused=True, **CFG)
+    fus.run(2)
+    fus.save(str(tmp_path))
+    manifest = json.load(open(str(tmp_path / "ckpt_00000002.json")))
+    assert all(isinstance(v, float)
+               for v in manifest["metadata"]["zeta"].values())
