@@ -31,7 +31,7 @@ import numpy as np
 
 
 def _make_experiment(dataset: str, K: int, n_samples: int, seed: int = 0,
-                     E_add: float = 0.01, **kw):
+                     E_add: float = 0.01, scheduler: str = "jcsba", **kw):
     from repro.fl.runtime import MFLExperiment
     from repro.wireless.params import WirelessParams
     # keep the paper's per-client bandwidth density (Table 2: 10 MHz for
@@ -39,7 +39,7 @@ def _make_experiment(dataset: str, K: int, n_samples: int, seed: int = 0,
     # with the default absolute B_max, K=50 rounds degenerate to empty
     # schedules and the split pipeline never even runs its client stage
     params = WirelessParams(K=K, B_max=1e6 * K, E_add=E_add)
-    return MFLExperiment(dataset=dataset, scheduler="jcsba", K=K,
+    return MFLExperiment(dataset=dataset, scheduler=scheduler, K=K,
                          n_samples=n_samples, seed=seed, eval_every=10 ** 9,
                          params=params, **kw)
 
@@ -85,8 +85,10 @@ def bench_per_round(K: int, rounds: int, dataset: str = "iemocap"
 
 # ---------------------------------------------------------------------------
 def bench_v_sweep(K: int, rounds: int, V_grid, dataset: str = "iemocap",
-                  seed: int = 0) -> dict:
-    """jit(vmap(scan)): every V scenario runs a whole experiment on device.
+                  seed: int = 0, scheduler: str = "jcsba") -> dict:
+    """jit(vmap(scan)): every V scenario runs a whole experiment on device,
+    sharded over the local devices' scenario mesh when more than one exists
+    (``scan_v_grid``'s auto mesh).
 
     The sweep regime shrinks ``E_add`` so the long-term energy constraint C5
     actually binds (the tiny synthetic shards draw ~2e-3 J per scheduled
@@ -97,7 +99,7 @@ def bench_v_sweep(K: int, rounds: int, V_grid, dataset: str = "iemocap",
     from repro.fl.fused_round import draw_round_xs
 
     exp = _make_experiment(dataset, K, _n_samples(K), seed=seed, fused=True,
-                           E_add=2e-4)
+                           E_add=2e-4, scheduler=scheduler)
     eng = exp._get_fused_engine()
     carry = exp._carry
     xs = draw_round_xs(exp, rounds)
@@ -113,6 +115,8 @@ def bench_v_sweep(K: int, rounds: int, V_grid, dataset: str = "iemocap",
     energy = np.asarray(carries.spent).sum(-1)              # [n_V]
     total = len(V_grid) * rounds
     row = {"K": K, "dataset": dataset, "rounds": rounds,
+           "scheduler": scheduler,
+           "devices": len(jax.devices()),
            "V_grid": [float(v) for v in V_grid],
            "total_fused_rounds": total, "wall_s": round(wall, 3),
            "rounds_per_sec": round(total / wall, 2),

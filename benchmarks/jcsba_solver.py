@@ -12,7 +12,10 @@ Two measurements:
   ``jit(vmap(scan(...)))``: every scenario runs T rounds with Lyapunov queue
   dynamics and warm-started antibodies entirely on device.  This is the
   workload that is intractable on the sequential path (it would be
-  n_scenarios × T sequential solves).
+  n_scenarios × T sequential solves).  With more than one local device the
+  scenario axis is sharded over a ``("scenario",)`` mesh via ``shard_map``
+  (``launch.mesh.make_sweep_mesh`` / ``launch.sharding``), so the grid
+  scales with the device count.
 
 ``--experiments`` extends the sweep from solver-only rounds to *whole
 experiments* per scenario: the fused round engine (fl/fused_round.py) scans
@@ -93,10 +96,16 @@ def bench_per_round(K: int, rounds: int, dataset: str = "crema_d",
 # ---------------------------------------------------------------------------
 def bench_sweep(K: int, rounds: int, tau_grid, bmax_grid,
                 datasets=("crema_d", "iemocap"), seed: int = 0) -> dict:
-    """jit(vmap(scan)): the full scenario grid × T rounds in one program."""
+    """jit(vmap(scan)): the full scenario grid × T rounds in one program —
+    sharded over the local devices' ``("scenario",)`` mesh when more than one
+    is available (``launch.mesh.make_sweep_mesh``), single-device vmap
+    otherwise."""
     import jax
     import jax.numpy as jnp
 
+    from repro.launch.mesh import make_sweep_mesh
+    from repro.launch.sharding import (pad_leading_axis, scenario_shard_map,
+                                       slice_leading_axis)
     from repro.wireless.lyapunov import queue_update
     from repro.wireless.params import WirelessParams
     from repro.wireless.solver import SolverHyper, build_solver_data
@@ -138,15 +147,26 @@ def bench_sweep(K: int, rounds: int, tau_grid, bmax_grid,
         _, (Js, nsched) = jax.lax.scan(round_body, carry, h_seq)
         return Js, nsched
 
-    run = jax.jit(jax.vmap(one_scenario))
+    vm = jax.vmap(one_scenario)
+    mesh = make_sweep_mesh()
+    if mesh is not None:
+        d = mesh.devices.size
+        stacked, h_all, keys = (pad_leading_axis(x, d)
+                                for x in (stacked, h_all, keys))
+        run = jax.jit(scenario_shard_map(vm, mesh, n_args=3,
+                                         sharded_args=(0, 1, 2)))
+    else:
+        run = jax.jit(vm)
     Js, ns = jax.block_until_ready(run(stacked, h_all, keys))   # compile
     t0 = time.perf_counter()
     Js, ns = jax.block_until_ready(run(stacked, h_all, keys))
     wall = time.perf_counter() - t0
+    Js, ns = slice_leading_axis((Js, ns), n_scen)
     total = n_scen * rounds
     row = {"K": K, "n_scenarios": n_scen, "rounds": rounds,
            "grid": f"{len(datasets)} profiles x {len(tau_grid)} tau_max x "
                    f"{len(bmax_grid)} B_max",
+           "devices": 1 if mesh is None else int(mesh.devices.size),
            "total_solves": total, "wall_s": round(wall, 3),
            "solves_per_sec": round(total / wall, 2),
            "mean_scheduled": round(float(np.mean(np.asarray(ns))), 2),

@@ -9,7 +9,11 @@ Benchmarks:
   table3_*            — final multimodal/unimodal accuracy per algorithm
                         (paper Table 3; reads benchmarks/results/repro if the
                         full experiment ran, else runs a short version)
-  fig4_V_*            — energy/accuracy trade-off vs V (paper Fig. 4)
+  v_frontier_*        — Fig.-4 V-frontier: dense V grid, whole fused
+                        experiments per (policy, V) sharded over the local
+                        devices, multimodal + unimodal eval metrics per point
+                        (``--v-frontier`` runs only this and writes
+                        BENCH_v_frontier.json; see benchmarks/v_frontier.py)
   solver_runtime      — JCSBA per-round solve time (paper §VI: 0.008 s)
   bound_descent       — Theorem-2 bound vs measured loss descent
   kernel_*            — Pallas kernel oracles (interpret) + XLA-path timing
@@ -31,8 +35,6 @@ from __future__ import annotations
 
 import argparse
 import json
-import os
-import sys
 import time
 
 import numpy as np
@@ -74,27 +76,30 @@ def bench_table3(quick: bool):
         emit(f"table3_{key.replace('/', '_')}", 0.0, derived)
 
 
-def bench_fig4(quick: bool):
-    from repro.fl.runtime import MFLExperiment
-    Vs = [0.01, 1.0] if quick else [0.0001, 0.01, 0.1, 1.0, 10.0]
-    rounds = 12 if quick else 60
-    path = os.path.join(os.path.dirname(__file__), "results", "fig4.json")
-    if os.path.exists(path):
-        data = json.load(open(path))
+def bench_v_frontier(quick: bool):
+    """Fig.-4 V-frontier via the sharded fused V-grid scan: dense V grid,
+    whole experiments per (policy, V), multimodal + unimodal eval metrics —
+    replaces the old 5-point energy-only host-loop fig4 scan."""
+    from benchmarks.v_frontier import run_frontier
+    if TINY:
+        out = run_frontier(("jcsba", "random"), V_grid=[0.01, 0.1, 1.0, 10.0],
+                           K=6, rounds=4, n_samples=120)
+    elif quick:
+        out = run_frontier(("jcsba", "random"),
+                           V_grid=[0.001, 0.01, 0.1, 1.0, 10.0, 100.0],
+                           rounds=16)
     else:
-        data = {}
-        for V in Vs:
-            exp = MFLExperiment(dataset="crema_d", scheduler="jcsba",
-                                n_samples=400, seed=0, V=V, eval_every=4)
-            exp.run(rounds)
-            f = exp.final_metrics()
-            data[str(V)] = {"multimodal": f.get("multimodal"),
-                            "energy": f.get("energy_total")}
-        os.makedirs(os.path.dirname(path), exist_ok=True)
-        json.dump(data, open(path, "w"))
-    for V, d in sorted(data.items(), key=lambda kv: float(kv[0])):
-        emit(f"fig4_V={V}", 0.0,
-             f"mm={d['multimodal']:.4f};E={d['energy']:.4f}J")
+        out = run_frontier(("jcsba", "random", "round_robin", "selection"))
+    PAYLOADS["v_frontier"] = out
+    for pol, rows in out["policies"].items():
+        for r in rows:
+            mods = [k for k in r if k not in
+                    ("V", "multimodal", "loss", "energy_J",
+                     "mean_participants")]
+            emit(f"v_frontier_{pol}_V={r['V']:g}", 0.0,
+                 f"mm={r['multimodal']:.4f};"
+                 + ";".join(f"{m}={r[m]:.4f}" for m in sorted(mods))
+                 + f";E={r['energy_J']:.4f}J;part={r['mean_participants']}")
 
 
 def bench_solver_runtime(quick: bool):
@@ -269,6 +274,10 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     ap.add_argument("--tiny", action="store_true",
                     help="CI smoke mode (shrinks supporting benches)")
+    ap.add_argument("--v-frontier", action="store_true",
+                    help="run only the Fig.-4 V-frontier (sharded fused "
+                         "V-grid scan with eval metrics) and write "
+                         "BENCH_v_frontier.json")
     ap.add_argument("--json-out", default=None,
                     help="dump emitted rows + raw payloads as JSON")
     args, _ = ap.parse_known_args()
@@ -276,7 +285,7 @@ def main() -> None:
     quick = not args.full
     benches = {
         "table3": bench_table3,
-        "fig4": bench_fig4,
+        "v_frontier": bench_v_frontier,
         "solver_runtime": bench_solver_runtime,
         "bound": bench_bound,
         "kernels": bench_kernels,
@@ -285,6 +294,8 @@ def main() -> None:
         "jcsba_solver": bench_jcsba_solver,
         "fused_round": bench_fused_round,
     }
+    if args.v_frontier:
+        args.only = "v_frontier"
     print("name,us_per_call,derived")
     for name, fn in benches.items():
         if args.only and name != args.only:
@@ -293,6 +304,10 @@ def main() -> None:
             fn(quick)
         except Exception as e:  # keep the harness running
             emit(f"{name}_ERROR", 0.0, f"{type(e).__name__}:{e}")
+    if args.v_frontier and "v_frontier" in PAYLOADS:
+        with open("BENCH_v_frontier.json", "w") as f:
+            json.dump(PAYLOADS["v_frontier"], f, indent=2)
+        print("wrote BENCH_v_frontier.json", flush=True)
     if args.json_out:
         payload = {"rows": [{"name": n, "us_per_call": u, "derived": d}
                             for n, u, d in ROWS],

@@ -24,10 +24,12 @@ def main():
                          "numpy mirror (np), or the original sequential "
                          "scalar path (seq)")
     ap.add_argument("--fused", action="store_true",
-                    help="run JCSBA on the fused round engine: whole rounds "
-                         "as one jitted program, scanned in eval_every-sized "
-                         "chunks so the accuracy curve is still recorded "
-                         "(requires --solver jax)")
+                    help="run on the fused round engine: whole rounds as one "
+                         "jitted program, scanned in eval_every-sized chunks "
+                         "so the accuracy curve is still recorded.  Applies "
+                         "to every algorithm with a traced policy core "
+                         "(jcsba/random/round_robin/selection; requires "
+                         "--solver jax); dropout stays on the host loop")
     ap.add_argument("--out", default="examples/out_wireless_mfl.json")
     args = ap.parse_args()
     if args.fused and args.solver != "jax":
@@ -36,7 +38,7 @@ def main():
     eval_every = 4
     results = {}
     for algo in [args.baseline, "jcsba"]:
-        fused = args.fused and algo == "jcsba"
+        fused = args.fused and algo != "dropout"
         print(f"=== {algo}{' (fused)' if fused else ''} ===")
         exp = MFLExperiment(dataset=args.dataset, scheduler=algo,
                             n_samples=args.n_samples, seed=0,

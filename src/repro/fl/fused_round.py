@@ -13,11 +13,14 @@ leaving the device.
 Carry layout (``FusedCarry``, a pytree):
 
 * ``params``      — the global multimodal model {modality: subtree};
-* ``warm_a``      — last round's winning antibody (JCSBA warm start);
+* ``policy``      — the scheduling policy's own state dict
+  (``wireless.policies``: JCSBA's warm-start antibody, Round-Robin's cursor,
+  empty for Random/Selection) — the engine is policy-generic: any scheduler
+  exposing a traced ``SchedulePolicy`` core runs fused;
 * ``Q`` / ``spent`` — Lyapunov virtual energy queues + cumulative energy;
 * ``zeta`` / ``delta`` — the Theorem-1 ζ_m / δ_{k,m} trackers as dense
   [M] / [M, K] arrays (modality order = ``BoundState.mods``);
-* ``model_dist``  — ‖θ_k − θ⁰‖ bookkeeping (Selection-scheduler parity).
+* ``model_dist``  — ‖θ_k − θ⁰‖ bookkeeping (read by the Selection policy).
 
 Per-round inputs (``RoundXs``) are the only randomness the loop consumes:
 channel gains, the immune-search PRNG seed and per-client dropout seeds.
@@ -46,16 +49,19 @@ from jax import lax
 
 from ..core import aggregation as agg
 from ..core.convergence import tracker_update_masked
+from ..launch.mesh import make_sweep_mesh
+from ..launch.sharding import (pad_leading_axis, scenario_shard_map,
+                               slice_leading_axis)
 from ..wireless.lyapunov import queue_update
-from ..wireless.solver import SolverHyper, build_solver_data
+from ..wireless.solver import build_solver_data
 from ..wireless.solver.common import B_LO
-from ..wireless.solver.jaxsolver import rate, solve_core, to_device
+from ..wireless.solver.jaxsolver import rate, to_device
 
 
 class FusedCarry(NamedTuple):
     """Whole-experiment state threaded through ``lax.scan``."""
     params: Dict[str, Any]
-    warm_a: jax.Array           # [K] bool
+    policy: Dict[str, jax.Array]    # SchedulePolicy state (may be empty)
     Q: jax.Array                # [K]
     spent: jax.Array            # [K]
     zeta: jax.Array             # [M]
@@ -83,11 +89,12 @@ class RoundAux(NamedTuple):
 def draw_round_xs(exp, rounds: int) -> RoundXs:
     """Consume ``rounds`` rounds of the experiment's host randomness in the
     canonical order — one host-loop round exactly: K channel draws
-    (``Channel.draw``), one solver seed (the ``rng.integers(2 ** 31)`` in
-    ``JCSBAScheduler.schedule``), then the per-client dropout seeds via the
-    experiment's own ``_draw_client_seeds`` so that contract stays
-    single-sourced.  A fused experiment and a host-loop experiment sharing
-    the same seed therefore walk the identical ``np.random`` stream."""
+    (``Channel.draw``), one policy seed (the single ``rng.integers(2 ** 31)``
+    every policy-backed scheduler draws per round, whatever the policy), then
+    the per-client dropout seeds via the experiment's own
+    ``_draw_client_seeds`` so that contract stays single-sourced.  A fused
+    experiment and a host-loop experiment sharing the same seed therefore
+    walk the identical ``np.random`` stream."""
     K = exp.params.K
     h = np.empty((rounds, K), np.float32)
     draw = np.empty(rounds, np.uint32)
@@ -116,14 +123,17 @@ class FusedRoundEngine:
     """
 
     def __init__(self, exp):
-        if exp.scheduler.name != "jcsba" or exp.scheduler.solver != "jax":
-            raise ValueError("fused rounds require scheduler='jcsba', "
-                             "solver='jax'")
+        exp.scheduler.bind(exp.params.K, exp.client_mods)
+        self.policy = exp.scheduler.policy
+        if self.policy is None:
+            raise ValueError(
+                f"fused rounds require a traced scheduling policy "
+                f"(wireless.policies); scheduler {exp.scheduler.name!r} "
+                f"runs host-side only")
         self.exp = exp
         self.K = exp.params.K
         self.mods = list(exp.bound.mods)
-        self.hp = SolverHyper(**exp.scheduler.immune_kwargs)
-        self.V = exp.scheduler.V
+        self.V = getattr(exp.scheduler, "V", 1.0)
         self.staleness = float(exp.bound.staleness)
         self.trace_count = 0
 
@@ -152,19 +162,18 @@ class FusedRoundEngine:
         self._jit_scan = jax.jit(self._scan_steps)
         self._jit_vsweep = jax.jit(jax.vmap(self._scan_one_v,
                                             in_axes=(0, None, None)))
+        self._sharded_vsweep_cache = {}     # mesh -> jitted shard_map sweep
 
     # ------------------------------------------------------------------
     # host state ↔ carry
     # ------------------------------------------------------------------
     def init_carry(self) -> FusedCarry:
         exp = self.exp
-        warm = exp.scheduler._last_a
-        warm = (np.zeros(self.K, bool) if warm is None
-                else np.asarray(warm, bool))
         f32 = lambda x: jnp.asarray(x, jnp.float32)     # noqa: E731
         return FusedCarry(
             params=jax.tree.map(jnp.asarray, exp.global_params),
-            warm_a=jnp.asarray(warm),
+            policy={k: jnp.asarray(v)
+                    for k, v in exp.scheduler.state().items()},
             Q=f32(exp.queues.Q), spent=f32(exp.queues.spent),
             zeta=f32([exp.bound.zeta[m] for m in self.mods]),
             delta=f32(np.stack([exp.bound.delta[m] for m in self.mods])),
@@ -182,7 +191,8 @@ class FusedRoundEngine:
             exp.bound.zeta[m] = float(carry.zeta[i])
             exp.bound.delta[m] = np.asarray(carry.delta[i], np.float64)
         exp.model_dist = np.asarray(carry.model_dist, np.float64)
-        exp.scheduler._last_a = np.asarray(carry.warm_a, bool)
+        exp.scheduler.load_state(
+            {k: np.asarray(v) for k, v in carry.policy.items()})
 
     # ------------------------------------------------------------------
     # the fused program
@@ -190,16 +200,18 @@ class FusedRoundEngine:
     def _round_step(self, carry: FusedCarry, xs: RoundXs, overrides=None):
         self.trace_count += 1
 
-        # 1. server decision: population-batched JCSBA (Algorithm 2 + P4.2')
+        # 1. server decision: the scheduler's traced policy core (JCSBA's
+        # population-batched solve, or a baseline's traced schedule) — the
+        # policy state (warm start / cursor / ...) threads through the carry
         data = dict(self._solver_tmpl)
         if overrides:
             data.update(overrides)      # e.g. a vmapped V for scenario sweeps
         data["Q"], data["h"] = carry.Q, xs.h
         data["zeta2"] = jnp.square(carry.zeta)
         data["delta2"] = jnp.square(carry.delta)
-        seeds2 = jnp.stack([carry.warm_a, jnp.zeros_like(carry.warm_a)])
-        a, J, B = solve_core(data, seeds2,
-                             jax.random.PRNGKey(xs.draw_seed), self.hp)
+        pstate, a, B, J = self.policy.step(
+            carry.policy, data, carry.model_dist,
+            jax.random.PRNGKey(xs.draw_seed))
 
         # 2. latency feasibility (C4): scheduled-but-late ⇒ failure — energy
         # is spent, nothing is uploaded
@@ -207,8 +219,9 @@ class FusedRoundEngine:
         tcom = jnp.where(a, data["gamma"] / jnp.maximum(r, 1e-30), 0.0)
         ok = a & (tcom + self._tau_cmp <= self._tau_max + 1e-12)
 
-        # 3. masked whole-cohort BGD updates (Eq. 7) — JCSBA never drops a
-        # modality, so the upload mask is participation ∧ ownership.  An
+        # 3. masked whole-cohort BGD updates (Eq. 7) — none of the traced
+        # policies drops a modality (only the host-only dropout baseline
+        # does), so the upload mask is participation ∧ ownership.  An
         # empty round skips the BGD entirely (lax.cond), mirroring the host
         # loop's early return: with every client masked the cohort's outputs
         # are exactly the broadcast globals + zero gradients anyway, so the
@@ -255,7 +268,7 @@ class FusedRoundEngine:
         d_sq = sum(dist_sq[m] * avail[m] for m in self.mods)
         model_dist = jnp.where(ok, jnp.sqrt(d_sq), carry.model_dist)
 
-        new_carry = FusedCarry(new_params, a, Qn, spent,
+        new_carry = FusedCarry(new_params, pstate, Qn, spent,
                                jnp.stack(zs), jnp.stack(ds), model_dist)
         aux = RoundAux(a, ok, J, w, spent.sum())
         return new_carry, aux
@@ -277,14 +290,40 @@ class FusedRoundEngine:
             return self._round_step(c, x, overrides={"V": V})
         return lax.scan(body, carry, xs)
 
-    def scan_v_grid(self, V_grid, carry: FusedCarry, xs: RoundXs):
-        """Whole *experiments* vmapped over a drift-penalty grid: every V in
+    def scan_v_grid(self, V_grid, carry: FusedCarry, xs: RoundXs,
+                    mesh="auto"):
+        """Whole *experiments* over a drift-penalty grid: every V in
         ``V_grid`` runs the full R-round experiment (same initial carry, same
         channel/dropout randomness — the paper's Fig.-4 controlled V study)
         under one ``jit(vmap(scan))``.  Returns (final carries, auxs) with a
         leading [len(V_grid)] axis.  This is the dense V-frontier workload
-        the split pipeline cannot express without n_V × R host round-trips."""
-        return self._jit_vsweep(jnp.asarray(V_grid, jnp.float32), carry, xs)
+        the split pipeline cannot express without n_V × R host round-trips.
+
+        The scenario axis is sharded across a device mesh when one is
+        available: ``mesh="auto"`` builds a 1-D ``("scenario",)`` mesh over
+        all local devices (``launch.mesh.make_sweep_mesh``; virtual CPU
+        devices included), ``mesh=None`` forces the single-device vmap, or
+        pass an explicit mesh.  Scenarios are independent, so sharding is
+        pure SPMD fan-out via ``shard_map`` (``launch.sharding``) — grids
+        that don't divide the device count are padded by repeating the last
+        V and sliced back.  Sharded and single-device runs produce the same
+        results (tests/test_sharded_sweep.py)."""
+        V = jnp.asarray(V_grid, jnp.float32)
+        if mesh == "auto":
+            mesh = make_sweep_mesh()
+        if mesh is None or mesh.devices.size <= 1:
+            return self._jit_vsweep(V, carry, xs)
+        n_V = V.shape[0]
+        Vp = pad_leading_axis(V, mesh.devices.size)
+        fn = self._sharded_vsweep_cache.get(mesh)
+        if fn is None:
+            vm = jax.vmap(self._scan_one_v, in_axes=(0, None, None))
+            fn = jax.jit(scenario_shard_map(vm, mesh, n_args=3,
+                                            sharded_args=(0,)))
+            self._sharded_vsweep_cache[mesh] = fn
+        carries, auxs = fn(Vp, carry, xs)
+        return (slice_leading_axis(carries, n_V),
+                slice_leading_axis(auxs, n_V))
 
     # ------------------------------------------------------------------
     def run(self, carry: FusedCarry, xs: RoundXs, scanned: bool):

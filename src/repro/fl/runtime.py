@@ -43,15 +43,18 @@ round — not the client — the unit of compute:
 Fused round engine (``fused=True``)
 -----------------------------------
 The batched engine still hops to host between the jitted solver and the
-jitted client stage every round.  ``fused=True`` (requires
-``scheduler="jcsba"``, ``solver="jax"``) runs the *whole* round — steps 1-5
-above — as one jitted program (fl/fused_round.py): ``run_round`` becomes a
-thin host wrapper that pregenerates the round's randomness, calls the fused
-step and decodes the traced schedule arrays into a JSON-safe RoundRecord;
-``run_scanned(R)`` drives R rounds under a single ``lax.scan``.  Per-round
-host rng consumption is static (see ``_draw_client_seeds``), so all three
-engines consume the identical stream and stay equivalent round by round
-(tests/test_fused_round.py).
+jitted client stage every round.  ``fused=True`` runs the *whole* round —
+steps 1-5 above — as one jitted program (fl/fused_round.py) for every
+scheduler with a traced policy core (jcsba / random / round_robin /
+selection — see ``wireless.policies``; only the host-only ``dropout``
+baseline and the np/seq JCSBA parity backends are excluded): ``run_round``
+becomes a thin host wrapper that pregenerates the round's randomness, calls
+the fused step and decodes the traced schedule arrays into a JSON-safe
+RoundRecord; ``run_scanned(R)`` drives R rounds under a single ``lax.scan``.
+Per-round host rng consumption is static (see ``_draw_client_seeds``; every
+policy draws exactly one solver seed per round), so all engines consume the
+identical stream and stay equivalent round by round
+(tests/test_fused_round.py, parametrized over all four policies).
 """
 from __future__ import annotations
 
@@ -126,9 +129,6 @@ class MFLExperiment:
         self.eval_every = eval_every
         self.batched = batched
         self.fused = fused
-        if fused and (scheduler != "jcsba" or solver != "jax"):
-            raise ValueError("fused=True requires scheduler='jcsba' and "
-                             "solver='jax' (the fully on-device round)")
         self._fused_engine = None           # built lazily (fl/fused_round.py)
         self._carry = None                  # FusedCarry when fused
         self._stacked_dev = None            # device-resident client stack
@@ -160,6 +160,13 @@ class MFLExperiment:
             kw.setdefault("V", V)
             kw.setdefault("solver", solver)
         self.scheduler: Scheduler = make_scheduler(scheduler, self.rng, **kw)
+        self.scheduler.bind(K, self.client_mods)
+        if fused and self.scheduler.policy is None:
+            raise ValueError(
+                f"fused=True requires a traced scheduling policy; "
+                f"scheduler={scheduler!r} with solver={solver!r} runs "
+                f"host-side only (traced cores exist for jcsba/random/"
+                f"round_robin/selection with solver='jax')")
         self.model_dist = np.zeros(K)
         self.history: List[RoundRecord] = []
         self._round = 0
@@ -395,15 +402,15 @@ class MFLExperiment:
             # the carry is authoritative mid-fused-experiment: mirror it back
             # into the host-side state the checkpoint schema reads
             self._fused_engine.export_carry(self._carry)
-        warm = getattr(self.scheduler, "_last_a", None)
         state = {
             "global_params": self.global_params,
             "queues_Q": self.queues.Q,
             "queues_spent": self.queues.spent,
             "delta": {m: self.bound.delta[m] for m in self.all_mods},
             "model_dist": self.model_dist,
-            "warm_a": (np.zeros(self.params.K, bool) if warm is None
-                       else np.asarray(warm, bool)),
+            # the policy's own evolving state (JCSBA warm-start antibody,
+            # Round-Robin cursor, ...) via the explicit checkpoint API
+            "policy": self.scheduler.state(),
         }
         meta = {"round": self._round,
                 "zeta": {m: float(self.bound.zeta[m]) for m in self.all_mods},
@@ -423,11 +430,14 @@ class MFLExperiment:
             self.bound.delta[m] = np.asarray(state["delta"][m])
             self.bound.zeta[m] = manifest["metadata"]["zeta"][m]
         self.model_dist = np.asarray(state["model_dist"])
-        warm = state.get("warm_a")
-        if warm is not None and hasattr(self.scheduler, "_last_a"):
-            # an all-zeros warm row is indistinguishable from "no winner yet"
-            # after _seed_antibodies padding, so a plain array restore is exact
-            self.scheduler._last_a = np.asarray(warm, bool)
+        # policy state via the explicit API; stateless policies saved nothing
+        # (the empty dict flattens away).  Pre-policy checkpoints stored the
+        # JCSBA warm start as a top-level "warm_a" — still accepted.
+        pol = state.get("policy")
+        if pol is None and "warm_a" in state:
+            pol = {"warm_a": state["warm_a"]}
+        if pol:
+            self.scheduler.load_state(pol)
         self._round = manifest["step"]
         if self.fused:
             # rebuild the fused carry from the restored host state

@@ -23,6 +23,26 @@ def make_debug_mesh(n_data: int = 1, n_model: int = 1):
     return jax.make_mesh((n_data, n_model), ("data", "model"))
 
 
+def make_sweep_mesh(n_devices: int | None = None):
+    """1-D ``("scenario",)`` mesh over the local devices for embarrassingly
+    parallel scenario sweeps (V grids, τ×B grids — every scenario is an
+    independent experiment, so the only sharding axis is the grid itself).
+
+    Returns ``None`` on a single device — the sweep drivers
+    (``FusedRoundEngine.scan_v_grid``, ``benchmarks/jcsba_solver.py``) take
+    that as "fall back to the plain single-device vmap".  Virtual CPU devices
+    (``XLA_FLAGS=--xla_force_host_platform_device_count=N``) count like real
+    ones, which is how the sharded-vs-single parity tests run on CPU."""
+    import numpy as np
+    from jax.sharding import Mesh
+
+    devs = jax.devices()
+    n = len(devs) if n_devices is None else min(n_devices, len(devs))
+    if n <= 1:
+        return None
+    return Mesh(np.asarray(devs[:n]), ("scenario",))
+
+
 def data_axes(mesh) -> tuple:
     """Axes the global batch is sharded over."""
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

@@ -118,6 +118,52 @@ def tree_shardings(tree, mesh: Mesh, fsdp: Optional[tuple]):
 
 
 # ---------------------------------------------------------------------------
+# scenario sweeps: shard an embarrassingly-parallel grid's leading axis
+# ---------------------------------------------------------------------------
+def scenario_shard_map(fn, mesh: Mesh, n_args: int,
+                       sharded_args: Sequence[int] = (0,)):
+    """Wrap an already-vmapped sweep ``fn`` in ``shard_map`` over the mesh's
+    ``"scenario"`` axis: arguments listed in ``sharded_args`` are split along
+    their leading (scenario) axis, the rest are replicated, and every output
+    leaf must carry a leading scenario axis.  Scenarios are independent whole
+    programs (no cross-scenario collectives), so this is pure SPMD fan-out —
+    wall-clock divides by the device count.  Pad the grid first
+    (``pad_leading_axis``) when it doesn't divide the mesh."""
+    from jax.experimental.shard_map import shard_map
+
+    sharded = set(sharded_args)
+    in_specs = tuple(P("scenario") if i in sharded else P()
+                     for i in range(n_args))
+    # check_rep=False: the replication checker mis-types lax.scan carries
+    # that mix replicated and sharded leaves (upstream jax limitation); the
+    # sweeps are collective-free, so the check buys nothing here
+    return shard_map(fn, mesh=mesh, in_specs=in_specs,
+                     out_specs=P("scenario"), check_rep=False)
+
+
+def pad_leading_axis(tree, multiple: int):
+    """Pad every leaf's leading axis to a multiple of ``multiple`` by
+    repeating the last scenario (duplicate work, dropped by
+    ``slice_leading_axis`` — never garbage values, so padded rows still
+    execute the real program)."""
+    import jax.numpy as jnp
+
+    def pad(x):
+        n = (-x.shape[0]) % multiple
+        if n == 0:
+            return x
+        reps = jnp.broadcast_to(x[-1:], (n,) + x.shape[1:])
+        return jnp.concatenate([jnp.asarray(x), reps])
+
+    return jax.tree.map(pad, tree)
+
+
+def slice_leading_axis(tree, n: int):
+    """Drop the rows ``pad_leading_axis`` added."""
+    return jax.tree.map(lambda x: x[:n], tree)
+
+
+# ---------------------------------------------------------------------------
 # optimizer state: same layout as the matching parameter
 # ---------------------------------------------------------------------------
 def opt_state_pspecs(opt_state_shape, params_shape, fsdp: Optional[tuple]):

@@ -1,0 +1,196 @@
+"""Traced scheduling policies — every scheduler's per-round decision as one
+pure jittable program.
+
+The paper's evaluation (Figs. 4-6, Table 3) compares JCSBA against Random /
+Round-Robin / Selection baselines.  Historically only JCSBA had a traced core
+(``wireless.solver``); the baselines were host-side numpy loops, which locked
+the fused round engine (fl/fused_round.py) to ``scheduler="jcsba"``.  This
+module makes *every* policy a :class:`SchedulePolicy`: a frozen (hashable,
+jit-static) object exposing
+
+* ``init_state()`` — the policy's evolving state as a dict-of-arrays pytree
+  (JCSBA: the warm-start antibody; Round-Robin: the cursor; Random /
+  Selection: empty), carried through ``lax.scan`` by the fused engine and
+  checkpointed via the schedulers' ``state()/load_state()`` API;
+* ``step(state, data, model_dist, key)`` — one round's decision
+  ``(new_state, a, B, J)`` as a pure traced function of the round context
+  ``data`` (the ``solver.common.build_solver_data`` dict, f32 on device),
+  the ‖θ_k − θ⁰‖ bookkeeping and a ``jax.random`` key derived from the
+  round's single host seed draw.
+
+The host-side ``Scheduler`` classes in ``schedulers.py`` are thin wrappers
+that jit the *same* ``step`` — host/fused parity is by construction, not by
+mirroring (tests/test_fused_round.py locks it per policy).  Random bits come
+exclusively from the per-round ``key`` (one ``rng.integers(2**31)`` host draw
+per round for every policy — the static rng discipline PR 3 established for
+JCSBA), so fused xs pregeneration stays draw-for-draw identical to the host
+loop for all policies.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .solver import SolverHyper
+from .solver.jaxsolver import solve_core
+
+POLICY_NAMES = ("jcsba", "random", "round_robin", "selection")
+
+
+def equal_bandwidth_traced(a, B_max):
+    """Traced twin of the baselines' equal split: B_max/n over scheduled
+    clients, exact zeros elsewhere (and everywhere when nobody is scheduled).
+    """
+    n = a.sum()
+    share = jnp.asarray(B_max, jnp.float32) / jnp.maximum(n, 1)
+    return jnp.where(a, share, jnp.float32(0.0))
+
+
+class SchedulePolicy:
+    """Protocol for traced per-round scheduling decisions.
+
+    Implementations must be immutable/hashable (frozen dataclasses) so they
+    can ride along as static jit arguments; all evolving state flows through
+    ``state``.  ``data`` is the round-context dict of
+    ``solver.common.build_solver_data`` — policies read only the keys they
+    need (baselines: ``B_max``; JCSBA: the full solver context).
+    """
+    name = "base"
+
+    def init_state(self) -> Dict[str, np.ndarray]:
+        return {}
+
+    def step(self, state, data, model_dist, key):
+        """-> (new_state, a [K] bool, B [K] f32, J scalar f32)."""
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class JCSBAPolicy(SchedulePolicy):
+    """The paper's joint scheduling + bandwidth algorithm (Algorithm 2 +
+    P4.2' + Theorem-1 bound) via the population-batched fused solver.  State
+    is the warm-start antibody: the previous round's winner is written over
+    population row 0, the all-zeros antibody over row 1 (so the empty
+    schedule is always evaluated and J* is always finite)."""
+    K: int
+    hp: SolverHyper = SolverHyper()
+    name = "jcsba"
+
+    def init_state(self):
+        return {"warm_a": np.zeros(self.K, bool)}
+
+    def step(self, state, data, model_dist, key):
+        warm = jnp.asarray(state["warm_a"], bool)
+        seeds = jnp.stack([warm, jnp.zeros_like(warm)])
+        a, J, B = solve_core(data, seeds, key, self.hp)
+        return {"warm_a": a}, a, B, J
+
+
+@dataclasses.dataclass(frozen=True)
+class RandomPolicy(SchedulePolicy):
+    """Random client subset (without replacement), equal bandwidth split."""
+    K: int
+    n_sched: int = 4
+    name = "random"
+
+    def step(self, state, data, model_dist, key):
+        n = min(self.n_sched, self.K)
+        perm = jax.random.permutation(key, self.K)
+        a = jnp.zeros(self.K, bool).at[perm[:n]].set(True)
+        return state, a, equal_bandwidth_traced(a, data["B_max"]), \
+            jnp.float32(jnp.nan)
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundRobinPolicy(SchedulePolicy):
+    """Cycle through clients in fixed order, equal bandwidth.  State is the
+    cursor (int32), which now checkpoints/restores with the experiment."""
+    K: int
+    n_sched: int = 4
+    name = "round_robin"
+
+    def init_state(self):
+        return {"next": np.zeros((), np.int32)}
+
+    def step(self, state, data, model_dist, key):
+        n = min(self.n_sched, self.K)
+        idx = (state["next"] + jnp.arange(n, dtype=jnp.int32)) % self.K
+        a = jnp.zeros(self.K, bool).at[idx].set(True)
+        new = {"next": (state["next"] + jnp.int32(self.n_sched)) % self.K}
+        return new, a, equal_bandwidth_traced(a, data["B_max"]), \
+            jnp.float32(jnp.nan)
+
+
+@dataclasses.dataclass(frozen=True)
+class SelectionPolicy(SchedulePolicy):
+    """[26]: fixed selection ratio per modality-combination group; within
+    each group pick the clients whose local model moved farthest from θ⁰.
+
+    Group structure is static (derived from the cohort's modality ownership
+    at build time): ``group_ids[k]`` is client k's group, ``group_picks``
+    holds ``(group, n_pick)`` with ``n_pick = max(1, round(ratio·|group|))``.
+    The per-group top-k is a stable argsort over ``model_dist`` masked to the
+    group — ties resolve to the lowest client index, exactly like the old
+    host loop's stable ``sorted``."""
+    K: int
+    group_ids: Tuple[int, ...]
+    group_picks: Tuple[Tuple[int, int], ...]
+    name = "selection"
+
+    @classmethod
+    def from_modalities(cls, K: int,
+                        client_modalities: Optional[Sequence[Sequence[str]]],
+                        ratio: float = 0.4) -> "SelectionPolicy":
+        mods = client_modalities or [("m",)] * K
+        gid_of: Dict[frozenset, int] = {}
+        gids = [gid_of.setdefault(frozenset(m), len(gid_of)) for m in mods]
+        sizes: Dict[int, int] = {}
+        for g in gids:
+            sizes[g] = sizes.get(g, 0) + 1
+        picks = tuple(sorted((g, max(1, int(round(ratio * n))))
+                             for g, n in sizes.items()))
+        return cls(K, tuple(gids), picks)
+
+    def step(self, state, data, model_dist, key):
+        gid = jnp.asarray(self.group_ids, jnp.int32)
+        dist = jnp.asarray(model_dist, jnp.float32)
+        a = jnp.zeros(self.K, bool)
+        for g, n_pick in self.group_picks:
+            scores = jnp.where(gid == g, dist, -jnp.inf)
+            top = jnp.argsort(-scores)[:n_pick]
+            a = a.at[top].set(True)
+        return state, a, equal_bandwidth_traced(a, data["B_max"]), \
+            jnp.float32(jnp.nan)
+
+
+# ---------------------------------------------------------------------------
+# host entry point: one jitted step per (policy, pytree-signature)
+# ---------------------------------------------------------------------------
+@partial(jax.jit, static_argnames="policy")
+def policy_step(policy: SchedulePolicy, state, data, model_dist, seed):
+    """Jitted host-facing wrapper around ``policy.step``: derives the round's
+    ``jax.random`` key from the scalar ``seed`` (a uint32 array, NOT a Python
+    int — Python ints would retrace per round) exactly like the fused engine
+    does from ``xs.draw_seed``, so both paths consume identical bits."""
+    return policy.step(state, data, model_dist, jax.random.PRNGKey(seed))
+
+
+def make_policy(name: str, K: int,
+                client_modalities: Optional[Sequence[Sequence[str]]] = None,
+                **kw) -> SchedulePolicy:
+    name = name.lower()
+    if name == "jcsba":
+        return JCSBAPolicy(K, SolverHyper(**kw.get("immune_kwargs", {}) or {}))
+    if name == "random":
+        return RandomPolicy(K, kw.get("n_sched", 4))
+    if name in ("round_robin", "roundrobin"):
+        return RoundRobinPolicy(K, kw.get("n_sched", 4))
+    if name == "selection":
+        return SelectionPolicy.from_modalities(K, client_modalities,
+                                               kw.get("ratio", 0.4))
+    raise ValueError(f"no traced policy named {name!r}")

@@ -1,4 +1,4 @@
-"""Client scheduling strategies.
+"""Client scheduling strategies — thin host wrappers over traced policies.
 
 * ``JCSBAScheduler`` — the paper's algorithm: per-round P3 objective
   J₂(a) = V·ηρ√(A₁+A₂) + Σ_k a_k Q_k (e_com_k(B*) + e_cmp_k)
@@ -8,6 +8,23 @@
   (fixed ratios per modality-combination, picked by model distance), and
   Dropout [28] (random scheduling + modality dropout on multimodal clients —
   the dropout itself is applied by the FL client, flagged here).
+
+Every policy's decision logic lives in ``wireless.policies`` as a pure
+jittable ``SchedulePolicy.step``; the ``Scheduler`` classes here only manage
+host state (rng stream, policy state, ScheduleContext → device conversion)
+and jit the same traced core the fused round engine inlines — so the host
+loop and ``MFLExperiment(fused=True)`` agree by construction.
+
+RNG discipline: every policy-backed scheduler consumes exactly ONE
+``rng.integers(2**31)`` host draw per round (the seed of the round's
+``jax.random`` key), scheduled or not, feasible or not — the same static
+pattern ``fl.fused_round.draw_round_xs`` pregenerates.  ``DropoutScheduler``
+is the one exception (per-client host draws, no traced core) and therefore
+cannot run fused.
+
+Policy state (JCSBA's warm-start antibody, Round-Robin's cursor) is exposed
+through ``state()/load_state()`` — the checkpointing API the runtime uses
+instead of reaching into scheduler internals.
 
 All schedulers return ``ScheduleDecision`` with the participation vector, the
 bandwidth allocation and per-client modality-dropout flags.  Clients whose
@@ -57,70 +74,144 @@ def _equal_bandwidth(a: np.ndarray, params: WirelessParams) -> np.ndarray:
 
 class Scheduler:
     name = "base"
+    policy = None           # traced core, when one exists (PolicyScheduler)
+
+    def bind(self, K: int,
+             client_modalities: Optional[Sequence] = None) -> None:
+        """Bind the scheduler to a cohort size (no-op for host-only
+        schedulers).  Policy-backed schedulers build their traced core here;
+        the runtime calls this at experiment init so ``policy``/``state()``
+        are live before the first round."""
+
+    def state(self) -> Dict[str, np.ndarray]:
+        """Checkpointable policy state (empty for stateless schedulers)."""
+        return {}
+
+    def load_state(self, state: Dict[str, np.ndarray]) -> None:
+        """Restore ``state()``'s dict (no-op for stateless schedulers)."""
 
     def schedule(self, ctx: ScheduleContext) -> ScheduleDecision:  # pragma: no cover
         raise NotImplementedError
 
 
-class RandomScheduler(Scheduler):
+class PolicyScheduler(Scheduler):
+    """Host wrapper over a traced ``wireless.policies.SchedulePolicy``.
+
+    Subclasses implement ``_make_policy(K, client_modalities)`` and, when the
+    policy needs more context than ``B_max`` (JCSBA), ``_build_data(ctx)``.
+    ``schedule`` drives the shared jitted ``policies.policy_step`` and keeps
+    the policy state as host numpy between rounds.
+    """
+
+    def __init__(self, rng: np.random.Generator):
+        self.rng = rng
+        self._policy = None
+        self._state: Optional[Dict[str, np.ndarray]] = None
+        self._K: Optional[int] = None
+
+    # -- traced-core lifecycle ------------------------------------------
+    def _make_policy(self, K: int, client_modalities):
+        raise NotImplementedError
+
+    def bind(self, K: int, client_modalities=None) -> None:
+        self._K = K
+        pol = self._make_policy(K, client_modalities)
+        if pol is None:                     # host-only backend (jcsba np/seq)
+            self._policy = None
+            return
+        # policies are frozen dataclasses, so value equality detects any
+        # config change (K, n_sched, Selection's group structure, ...);
+        # an unchanged policy keeps its evolving state across rebinds
+        if pol != self._policy:
+            self._policy = pol
+            self._state = pol.init_state()
+
+    @property
+    def policy(self):
+        return self._policy
+
+    # -- checkpoint API --------------------------------------------------
+    def state(self) -> Dict[str, np.ndarray]:
+        return {} if self._state is None else \
+            {k: np.asarray(v) for k, v in self._state.items()}
+
+    def load_state(self, state: Dict[str, np.ndarray]) -> None:
+        if self._state is None:
+            self._state = {}
+        for k, tmpl in list(self._state.items()):
+            if k in state:
+                self._state[k] = np.asarray(state[k], tmpl.dtype)
+
+    # -- the per-round drive ---------------------------------------------
+    def _build_data(self, ctx: ScheduleContext) -> dict:
+        import jax.numpy as jnp
+        return {"B_max": jnp.float32(ctx.params.B_max)}
+
+    def schedule(self, ctx: ScheduleContext) -> ScheduleDecision:
+        import jax.numpy as jnp
+        from .policies import policy_step
+        K = len(ctx.h)
+        self.bind(K, ctx.client_modalities)
+        draw_seed = np.uint32(self.rng.integers(2 ** 31))
+        dist = (np.zeros(K) if ctx.model_dist is None else ctx.model_dist)
+        state = {k: jnp.asarray(v) for k, v in self._state.items()}
+        state, a, B, J = policy_step(self._policy, state,
+                                     self._build_data(ctx),
+                                     jnp.asarray(dist, jnp.float32),
+                                     draw_seed)
+        self._state = {k: np.asarray(v) for k, v in state.items()}
+        return ScheduleDecision(np.asarray(a, bool),
+                                np.asarray(B, np.float64),
+                                objective=float(J))
+
+
+class RandomScheduler(PolicyScheduler):
     """Random client subset, equal bandwidth split."""
     name = "random"
 
     def __init__(self, rng: np.random.Generator, n_sched: int = 4):
-        self.rng = rng
+        super().__init__(rng)
         self.n_sched = n_sched
 
-    def schedule(self, ctx: ScheduleContext) -> ScheduleDecision:
-        K = len(ctx.h)
-        a = np.zeros(K, bool)
-        a[self.rng.choice(K, size=min(self.n_sched, K), replace=False)] = True
-        return ScheduleDecision(a, _equal_bandwidth(a, ctx.params))
+    def _make_policy(self, K, client_modalities):
+        from .policies import make_policy
+        return make_policy(self.name, K, n_sched=self.n_sched)
 
 
-class RoundRobinScheduler(Scheduler):
+class RoundRobinScheduler(PolicyScheduler):
     """Cycle through clients in fixed order, equal bandwidth."""
     name = "round_robin"
 
-    def __init__(self, n_sched: int = 4):
+    def __init__(self, rng: np.random.Generator, n_sched: int = 4):
+        super().__init__(rng)
         self.n_sched = n_sched
-        self._next = 0
 
-    def schedule(self, ctx: ScheduleContext) -> ScheduleDecision:
-        K = len(ctx.h)
-        a = np.zeros(K, bool)
-        for i in range(min(self.n_sched, K)):
-            a[(self._next + i) % K] = True
-        self._next = (self._next + self.n_sched) % K
-        return ScheduleDecision(a, _equal_bandwidth(a, ctx.params))
+    def _make_policy(self, K, client_modalities):
+        from .policies import make_policy
+        return make_policy(self.name, K, n_sched=self.n_sched)
 
 
-class SelectionScheduler(Scheduler):
+class SelectionScheduler(PolicyScheduler):
     """[26]: fixed selection ratio per modality-combination group; within each
     group pick the clients whose local model moved farthest from θ⁰."""
     name = "selection"
 
     def __init__(self, rng: np.random.Generator, ratio: float = 0.4):
-        self.rng = rng
+        super().__init__(rng)
         self.ratio = ratio
 
-    def schedule(self, ctx: ScheduleContext) -> ScheduleDecision:
-        K = len(ctx.h)
-        mods = ctx.client_modalities or [("m",)] * K
-        groups: Dict[frozenset, List[int]] = {}
-        for k in range(K):
-            groups.setdefault(frozenset(mods[k]), []).append(k)
-        a = np.zeros(K, bool)
-        dist = ctx.model_dist if ctx.model_dist is not None else np.zeros(K)
-        for g in groups.values():
-            n_pick = max(1, int(round(self.ratio * len(g))))
-            order = sorted(g, key=lambda k: -dist[k])
-            for k in order[:n_pick]:
-                a[k] = True
-        return ScheduleDecision(a, _equal_bandwidth(a, ctx.params))
+    def _make_policy(self, K, client_modalities):
+        from .policies import make_policy
+        return make_policy(self.name, K, client_modalities,
+                           ratio=self.ratio)
 
 
 class DropoutScheduler(Scheduler):
-    """[28]: random scheduling; multimodal clients drop one modality w.p. p."""
+    """[28]: random scheduling; multimodal clients drop one modality w.p. p.
+
+    Host-only: the per-client dropout draws are data-dependent host rng
+    consumption, so this baseline has no traced core and cannot run under
+    the fused engine."""
     name = "dropout"
 
     def __init__(self, rng: np.random.Generator, n_sched: int = 4,
@@ -141,15 +232,15 @@ class DropoutScheduler(Scheduler):
         return ScheduleDecision(a, _equal_bandwidth(a, ctx.params), drops)
 
 
-class JCSBAScheduler(Scheduler):
+class JCSBAScheduler(PolicyScheduler):
     """The paper's joint client-scheduling + bandwidth-allocation algorithm.
 
     Three interchangeable solver backends (``solver=``):
 
-    * ``"jax"`` (default) — the population-batched fused program in
-      ``wireless.solver.jaxsolver``: one jitted call evaluates the whole
-      immune population (KKT bandwidth bisection + Theorem-1 bound + energy
-      term) per generation;
+    * ``"jax"`` (default) — the traced ``policies.JCSBAPolicy`` core over the
+      population-batched fused program in ``wireless.solver.jaxsolver``: one
+      jitted call evaluates the whole immune population (KKT bandwidth
+      bisection + Theorem-1 bound + energy term) per generation;
     * ``"np"`` — the float64 numpy mirror (``wireless.solver.ref``), same
       algorithm on the same random bits — the parity reference;
     * ``"seq"`` — the original sequential memoised path (scalar
@@ -159,7 +250,11 @@ class JCSBAScheduler(Scheduler):
     Warm-start seeding is explicit for every backend: the previous round's
     winner (when one exists) and the all-zeros antibody are written over the
     first population rows, so an empty schedule is always evaluated and the
-    returned objective is always finite.
+    returned objective is always finite.  For ``solver="jax"`` the warm start
+    IS the policy state (``state()["warm_a"]``); the np/seq backends keep it
+    in ``_last_a`` (an all-zeros warm row is indistinguishable from "no
+    winner yet" after seed padding, so the two representations round-trip
+    exactly through ``state()/load_state()``).
     """
     name = "jcsba"
 
@@ -167,11 +262,43 @@ class JCSBAScheduler(Scheduler):
                  immune_kwargs: Optional[dict] = None, solver: str = "jax"):
         if solver not in ("jax", "np", "seq"):
             raise ValueError(f"unknown JCSBA solver backend {solver!r}")
-        self.rng = rng
+        super().__init__(rng)
         self.V = V
         self.immune_kwargs = immune_kwargs or {}
         self.solver = solver
-        self._last_a: Optional[np.ndarray] = None
+        self._last_a: Optional[np.ndarray] = None    # np/seq warm start
+
+    def _make_policy(self, K, client_modalities):
+        if self.solver != "jax":
+            return None
+        from .policies import make_policy
+        return make_policy(self.name, K, immune_kwargs=self.immune_kwargs)
+
+    def _build_data(self, ctx: ScheduleContext) -> dict:
+        from .solver import build_solver_data
+        from .solver.jaxsolver import to_device
+        return to_device(build_solver_data(ctx.h, ctx.Q, ctx.cost,
+                                           ctx.params, ctx.bound, self.V))
+
+    # -- checkpoint API covers all three backends ------------------------
+    def state(self) -> Dict[str, np.ndarray]:
+        if self.solver == "jax" and self._state is not None:
+            return {k: np.asarray(v) for k, v in self._state.items()}
+        K = self._K if self._K is not None else (
+            len(self._last_a) if self._last_a is not None else 0)
+        warm = (np.zeros(K, bool) if self._last_a is None
+                else np.asarray(self._last_a, bool))
+        return {"warm_a": warm}
+
+    def load_state(self, state: Dict[str, np.ndarray]) -> None:
+        if "warm_a" not in state:
+            return
+        warm = np.asarray(state["warm_a"], bool)
+        if self.solver == "jax":
+            self.bind(len(warm))
+            self._state = {"warm_a": warm}
+        else:
+            self._last_a = warm
 
     # -- inner: bandwidth for a candidate a; returns (B, J2) or (None, inf) --
     def _evaluate(self, a: np.ndarray, ctx: ScheduleContext):
@@ -223,27 +350,30 @@ class JCSBAScheduler(Scheduler):
         self._last_a = a_star.copy()
         return ScheduleDecision(a_star, B, objective=J_star)
 
-    def schedule(self, ctx: ScheduleContext) -> ScheduleDecision:
-        if self.solver == "seq":
-            return self._schedule_seq(ctx)
-        from .solver import (SolverHyper, build_solver_data, solve_round,
-                             solve_round_np)
+    def _schedule_np(self, ctx: ScheduleContext) -> ScheduleDecision:
+        """Float64 numpy mirror on the identical jax.random bits."""
+        from .solver import SolverHyper, build_solver_data, solve_round_np
         K = len(ctx.h)
         hp = SolverHyper(**self.immune_kwargs)
         data = build_solver_data(ctx.h, ctx.Q, ctx.cost, ctx.params,
                                  ctx.bound, self.V)
         seeds = self._seed_antibodies(K)
-        if len(seeds) < 2:      # fixed [2, K] shape keeps the jit cache warm
+        if len(seeds) < 2:      # fixed [2, K] shape matches the jax backend
             seeds = np.vstack([seeds, np.zeros((2 - len(seeds), K), bool)])
-        # both backends consume the same jax.random bits from this seed, so
-        # solver="jax" and solver="np" walk the same search trajectory
         draw_seed = int(self.rng.integers(2 ** 31))
-        solve = solve_round if self.solver == "jax" else solve_round_np
-        a_star, J_star, B = solve(data, seeds, draw_seed, hp)
+        a_star, J_star, B = solve_round_np(data, seeds, draw_seed, hp)
         a_star = np.asarray(a_star, bool)
         self._last_a = a_star.copy()
         return ScheduleDecision(a_star, np.asarray(B, float),
                                 objective=float(J_star))
+
+    def schedule(self, ctx: ScheduleContext) -> ScheduleDecision:
+        self.bind(len(ctx.h), ctx.client_modalities)
+        if self.solver == "seq":
+            return self._schedule_seq(ctx)
+        if self.solver == "np":
+            return self._schedule_np(ctx)
+        return super().schedule(ctx)
 
 
 def make_scheduler(name: str, rng: np.random.Generator, **kw) -> Scheduler:
@@ -251,7 +381,7 @@ def make_scheduler(name: str, rng: np.random.Generator, **kw) -> Scheduler:
     if name == "random":
         return RandomScheduler(rng, **kw)
     if name in ("round_robin", "roundrobin"):
-        return RoundRobinScheduler(**kw)
+        return RoundRobinScheduler(rng, **kw)
     if name == "selection":
         return SelectionScheduler(rng, **kw)
     if name == "dropout":

@@ -10,9 +10,11 @@ and everything runs under a single ``jax.jit`` with ``lax.fori_loop`` over
 generations.  Random draws come from ``make_draws`` (``jax.random``) so the
 float64 numpy mirror in ``ref.py`` can consume the identical bits.
 
-``solve_core`` is the pure jnp entry point — benchmark sweep drivers wrap it
-in their own ``vmap``/``scan`` (scenario grids × rounds); ``solve_round`` is
-the host-facing per-round call used by ``schedulers.JCSBAScheduler``.
+``solve_core`` is the pure jnp entry point — ``policies.JCSBAPolicy`` builds
+its traced step on it and benchmark sweep drivers wrap it in their own
+``vmap``/``scan`` (scenario grids × rounds); ``solve_round`` is the
+standalone numpy-in/numpy-out per-solve call kept for the jax↔np parity
+suite (tests/test_solver_parity.py).
 """
 from __future__ import annotations
 

@@ -62,7 +62,7 @@ def test_fused_carry_tree_roundtrip(K, M, seed):
         params={m: {"w": jnp.asarray(rng.normal(size=(4, 2)), jnp.float32),
                     "b": jnp.asarray(rng.normal(size=(2,)), jnp.float32)}
                 for m in mods},
-        warm_a=jnp.asarray(rng.integers(0, 2, K), bool),
+        policy={"warm_a": jnp.asarray(rng.integers(0, 2, K), bool)},
         Q=jnp.asarray(rng.uniform(0, 1, K), jnp.float32),
         spent=jnp.asarray(rng.uniform(0, 1, K), jnp.float32),
         zeta=jnp.asarray(rng.uniform(0, 2, M), jnp.float32),

@@ -4,9 +4,12 @@ With identical experiment seeds the fused ``round_step`` and the host-loop
 reference (both ``batched=True`` and ``batched=False``) must produce the same
 per-round participant sets, the same aggregated params to float32
 reduction-order tolerance, and matching queue / ζ-δ tracker state over ≥5
-rounds — the fused path's contract.  Also locks the zero-host-round-trips
-property (one trace for many rounds) and the JSON-safety of records built
-from device arrays.
+rounds — the fused path's contract, parametrized over every traced scheduling
+policy (jcsba / random / round_robin / selection — the host wrappers and the
+fused engine drive the same ``wireless.policies`` cores, so the harness locks
+the whole policy layer, not just JCSBA).  Also locks the
+zero-host-round-trips property (one trace for many rounds) and the
+JSON-safety of records built from device arrays.
 """
 import dataclasses
 import json
@@ -16,13 +19,16 @@ import numpy as np
 import pytest
 
 from repro.fl.runtime import MFLExperiment, RoundRecord, jnp_or_np
+from repro.wireless.policies import POLICY_NAMES
 
-CFG = dict(scheduler="jcsba", n_samples=200, seed=3, eval_every=100)
+CFG = dict(n_samples=200, seed=3, eval_every=100)
 
 
-def _fused_vs_host(dataset, batched, rounds=5):
-    host = MFLExperiment(dataset=dataset, batched=batched, **CFG)
-    fus = MFLExperiment(dataset=dataset, fused=True, **CFG)
+def _fused_vs_host(dataset, batched, rounds=5, scheduler="jcsba"):
+    host = MFLExperiment(dataset=dataset, batched=batched,
+                         scheduler=scheduler, **CFG)
+    fus = MFLExperiment(dataset=dataset, fused=True, scheduler=scheduler,
+                        **CFG)
     host.run(rounds)
     fus.run(rounds)
     return host, fus
@@ -59,8 +65,9 @@ def _assert_equivalent(host, fus):
                                np.asarray(fus._carry.model_dist), atol=1e-4)
 
 
-def test_fused_matches_batched_host_loop_iemocap():
-    host, fus = _fused_vs_host("iemocap", batched=True)
+@pytest.mark.parametrize("policy", POLICY_NAMES)
+def test_fused_matches_batched_host_loop_iemocap(policy):
+    host, fus = _fused_vs_host("iemocap", batched=True, scheduler=policy)
     _assert_equivalent(host, fus)
 
 
@@ -69,19 +76,26 @@ def test_fused_matches_sequential_host_loop_crema():
     _assert_equivalent(host, fus)
 
 
-def test_fused_round_compiles_once():
+@pytest.mark.parametrize("policy", ("jcsba", "round_robin"))
+def test_fused_round_compiles_once(policy):
     """Zero host round-trips in steady state: many rounds, ONE trace of the
     fused program (the jit cache serves every subsequent round)."""
-    fus = MFLExperiment(dataset="iemocap", fused=True, **CFG)
+    fus = MFLExperiment(dataset="iemocap", fused=True, scheduler=policy,
+                        **CFG)
     fus.run(6)
     assert fus._fused_engine.trace_count == 1
 
 
-def test_fused_requires_jcsba_jax_solver():
+def test_fused_requires_traced_policy():
+    """Host-only schedulers (dropout, JCSBA's np/seq parity backends) have
+    no traced core and must be rejected up front."""
     with pytest.raises(ValueError):
-        MFLExperiment(dataset="iemocap", scheduler="random", fused=True)
+        MFLExperiment(dataset="iemocap", scheduler="dropout", fused=True)
     with pytest.raises(ValueError):
         MFLExperiment(dataset="iemocap", scheduler="jcsba", solver="seq",
+                      fused=True)
+    with pytest.raises(ValueError):
+        MFLExperiment(dataset="iemocap", scheduler="jcsba", solver="np",
                       fused=True)
 
 

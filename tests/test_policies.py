@@ -1,0 +1,158 @@
+"""Unit + checkpoint tests for the traced scheduling-policy layer
+(``wireless.policies`` + the ``state()/load_state()`` scheduler API).
+
+The fused-vs-host equivalence per policy lives in tests/test_fused_round.py;
+here we lock the policy cores' decision semantics directly (cycling order,
+subset sizes, per-group selection, equal-bandwidth split) and the explicit
+checkpoint API: a mid-experiment save/restore must round-trip every policy's
+state (JCSBA warm-start antibody, Round-Robin cursor) — the contract that
+replaced the old ``getattr(scheduler, "_last_a")`` plumbing.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.fl.runtime import MFLExperiment
+from repro.wireless.policies import (POLICY_NAMES, RandomPolicy,
+                                     RoundRobinPolicy, SelectionPolicy,
+                                     make_policy, policy_step)
+
+DATA = {"B_max": jnp.float32(10e6)}
+DIST0 = jnp.zeros(8, jnp.float32)
+
+
+def _step(policy, state, dist=None, seed=0):
+    state = {k: jnp.asarray(v) for k, v in state.items()}
+    dist = DIST0[:policy.K] if dist is None else jnp.asarray(dist, jnp.float32)
+    return policy_step(policy, state, DATA, dist, np.uint32(seed))
+
+
+# ---------------------------------------------------------------------------
+# traced cores
+# ---------------------------------------------------------------------------
+def test_random_policy_subset_and_equal_split():
+    pol = RandomPolicy(K=8, n_sched=3)
+    seen = set()
+    for seed in range(6):
+        _, a, B, J = _step(pol, pol.init_state(), seed=seed)
+        a, B = np.asarray(a), np.asarray(B)
+        assert a.sum() == 3
+        np.testing.assert_allclose(B[a], 10e6 / 3, rtol=1e-6)
+        assert (B[~a] == 0).all()
+        assert np.isnan(float(J))
+        seen.add(tuple(np.flatnonzero(a)))
+    assert len(seen) > 1            # different seeds -> different subsets
+
+
+def test_round_robin_policy_cycles_exactly():
+    pol = RoundRobinPolicy(K=8, n_sched=3)
+    state = pol.init_state()
+    picked = []
+    for seed in range(4):
+        state, a, B, _ = _step(pol, state, seed=seed)
+        picked.append(sorted(np.flatnonzero(np.asarray(a))))
+    # same fixed order as the old host loop: 0-2, 3-5, 6-7+0, 1-3
+    assert picked == [[0, 1, 2], [3, 4, 5], [0, 6, 7], [1, 2, 3]]
+    assert int(np.asarray(state["next"])) == (4 * 3) % 8
+
+
+def test_selection_policy_group_ratios_and_top_dist():
+    mods = [("a", "b")] * 4 + [("a",)] * 2 + [("b",)] * 2
+    pol = SelectionPolicy.from_modalities(8, mods, ratio=0.5)
+    # groups: {a,b} size 4 -> 2 picks, {a} size 2 -> 1, {b} size 2 -> 1
+    assert sorted(n for _, n in pol.group_picks) == [1, 1, 2]
+    dist = np.array([0.1, 0.9, 0.5, 0.2, 0.3, 0.8, 0.0, 0.0])
+    _, a, B, _ = _step(pol, pol.init_state(), dist=dist)
+    a = np.asarray(a)
+    # top-2 of group {a,b} by dist = clients 1, 2; top-1 of {a} = 5;
+    # {b} all-zero dist -> stable tie-break to the lowest index, 6
+    assert sorted(np.flatnonzero(a)) == [1, 2, 5, 6]
+    np.testing.assert_allclose(np.asarray(B)[a], 10e6 / 4, rtol=1e-6)
+
+
+def test_make_policy_factory_and_unknown_name():
+    for name in POLICY_NAMES:
+        pol = make_policy(name, 6, [("a",)] * 6)
+        assert pol.K == 6 and pol.name == name
+    with pytest.raises(ValueError):
+        make_policy("dropout", 6)       # host-only: no traced core
+
+
+def test_policy_state_is_scan_compatible_pytree():
+    """Policy states must flatten/unflatten cleanly and keep their structure
+    across a step — lax.scan threads them through the fused carry.  (JCSBA's
+    step needs the full solver context, so its structural check stops at the
+    round-trip; the fused equivalence harness exercises its step.)"""
+    for name in POLICY_NAMES:
+        pol = make_policy(name, 5, [("a",)] * 5)
+        state = {k: jnp.asarray(v) for k, v in pol.init_state().items()}
+        leaves, treedef = jax.tree_util.tree_flatten(state)
+        rebuilt = jax.tree_util.tree_unflatten(treedef, leaves)
+        assert jax.tree_util.tree_structure(rebuilt) == treedef
+        if name == "jcsba":
+            continue
+        new_state, a, B, _ = _step(pol, rebuilt)
+        assert jax.tree_util.tree_structure(new_state) == treedef
+        assert np.asarray(a).shape == (5,) and np.asarray(B).shape == (5,)
+
+
+def test_bind_rebuilds_on_config_change_and_keeps_state_otherwise():
+    """Regression: bind used to key the cached policy on K alone, so a
+    same-K cohort with different modality ownership kept Selection's stale
+    group structure.  Frozen-dataclass equality now detects the change —
+    while an unchanged config must NOT reset evolving state (the Round-Robin
+    cursor survives redundant rebinds)."""
+    from repro.wireless.schedulers import (RoundRobinScheduler,
+                                           SelectionScheduler)
+    sel = SelectionScheduler(np.random.default_rng(0))
+    sel.bind(4, [("a",), ("a",), ("b",), ("b",)])
+    picks1 = sel.policy.group_picks
+    sel.bind(4, [("a", "b")] * 4)                  # same K, new groups
+    assert sel.policy.group_picks != picks1
+
+    rr = RoundRobinScheduler(np.random.default_rng(0), n_sched=2)
+    rr.bind(6)
+    rr._state = {"next": np.asarray(4, np.int32)}  # mid-experiment cursor
+    rr.bind(6)                                     # redundant rebind
+    assert int(rr.state()["next"]) == 4
+
+
+# ---------------------------------------------------------------------------
+# checkpoint API: mid-experiment save/restore round-trip per policy
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("policy", POLICY_NAMES)
+def test_policy_state_roundtrips_through_checkpoint(tmp_path, policy):
+    cfg = dict(dataset="iemocap", scheduler=policy, n_samples=200, seed=7,
+               eval_every=100, fused=True)
+    exp = MFLExperiment(**cfg)
+    exp.run(3)
+    exp.save(str(tmp_path))
+
+    twin = MFLExperiment(**cfg)
+    assert twin.restore(str(tmp_path)) == 3
+    a_state, b_state = exp.scheduler.state(), twin.scheduler.state()
+    assert sorted(a_state) == sorted(b_state)
+    for k in a_state:
+        assert a_state[k].dtype == b_state[k].dtype
+        np.testing.assert_array_equal(a_state[k], b_state[k])
+    # the rebuilt fused carry starts from the restored policy state
+    for a, b in zip(jax.tree.leaves(exp._carry.policy),
+                    jax.tree.leaves(twin._carry.policy)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    twin.run(1)                      # restored experiment keeps running
+    assert twin._round == 4
+
+
+def test_host_loop_policy_state_roundtrips_without_fused(tmp_path):
+    """The API is engine-agnostic: a plain host-loop experiment checkpoints
+    the Round-Robin cursor too (pre-policy versions silently dropped it)."""
+    cfg = dict(dataset="iemocap", scheduler="round_robin", n_samples=200,
+               seed=2, eval_every=100)
+    exp = MFLExperiment(**cfg)
+    exp.run(3)
+    exp.save(str(tmp_path))
+    twin = MFLExperiment(**cfg)
+    twin.restore(str(tmp_path))
+    assert int(twin.scheduler.state()["next"]) == \
+        int(exp.scheduler.state()["next"])

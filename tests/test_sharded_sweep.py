@@ -1,0 +1,74 @@
+"""Sharded scenario sweeps: shard_map-vs-single-device parity.
+
+``FusedRoundEngine.scan_v_grid`` must produce the same results whether the
+scenario axis runs as one device's vmap or sharded over a
+``("scenario",)`` mesh.  Device count is fixed at jax import, so the 4-device
+case runs in a subprocess with ``XLA_FLAGS=--xla_force_host_platform_device_
+count=4`` (same pattern as tests/test_dryrun_mini.py).  The grid is
+deliberately NOT divisible by the device count, so the pad-with-last-V /
+slice-back path is exercised too.
+"""
+import json
+import os
+import subprocess
+import sys
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import json
+import numpy as np
+import jax
+
+from repro.fl.runtime import MFLExperiment
+from repro.fl.fused_round import draw_round_xs
+from repro.launch.mesh import make_sweep_mesh
+
+exp = MFLExperiment(dataset="iemocap", scheduler="jcsba", K=6, n_samples=120,
+                    seed=0, eval_every=10 ** 9, fused=True)
+eng = exp._get_fused_engine()
+xs = draw_round_xs(exp, 3)
+V = [0.01, 0.1, 1.0, 10.0, 3.0]            # 5 points on 4 devices -> padding
+
+single = eng.scan_v_grid(V, exp._carry, xs, mesh=None)
+mesh = make_sweep_mesh()
+assert mesh is not None and int(mesh.devices.size) == 4, mesh
+shard = eng.scan_v_grid(V, exp._carry, xs, mesh=mesh)
+
+bit_exact = True
+for a, b in zip(jax.tree.leaves(single), jax.tree.leaves(shard)):
+    a, b = np.asarray(a), np.asarray(b)
+    assert a.shape == b.shape, (a.shape, b.shape)
+    if not np.array_equal(a, b):
+        bit_exact = False
+        np.testing.assert_allclose(a, b, rtol=2e-6, atol=1e-7)
+# the V axis must actually differentiate scenarios (not a broadcast bug):
+# the JCSBA objective J = V*bound + energy varies with V even when the
+# argmin schedule does not
+J = np.asarray(shard[1].J)                 # [n_V, R]
+print(json.dumps({"ok": True, "devices": jax.device_count(),
+                  "bit_exact": bit_exact, "n_V": int(J.shape[0]),
+                  "distinct_J": len(set(np.round(J[:, 0], 8))) > 1}))
+"""
+
+
+def test_scan_v_grid_sharded_matches_single_device():
+    env = dict(os.environ, PYTHONPATH=SRC, JAX_PLATFORMS="cpu")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stderr[-2000:]
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    assert out["ok"] and out["devices"] == 4
+    assert out["n_V"] == 5
+    assert out["distinct_J"]
+
+
+def test_sweep_mesh_single_device_is_none():
+    """In the main test process (1 CPU device) the auto mesh must collapse to
+    the single-device fallback instead of building a degenerate mesh."""
+    from repro.launch.mesh import make_sweep_mesh
+    assert make_sweep_mesh() is None
+    assert make_sweep_mesh(1) is None

@@ -107,8 +107,9 @@ def test_fused_checkpoint_roundtrips_carry_mid_experiment(tmp_path):
     for a, b in zip(jax.tree.leaves(exp._carry),
                     jax.tree.leaves(twin._carry)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
-    # warm start survives into the host mirror too
+    # warm start survives into the host-side policy state too
     np.testing.assert_array_equal(
-        np.asarray(exp._carry.warm_a), np.asarray(twin.scheduler._last_a))
+        np.asarray(exp._carry.policy["warm_a"]),
+        twin.scheduler.state()["warm_a"])
     twin.run_scanned(2)
     assert twin._round == 5 and len(twin.history) == 2
