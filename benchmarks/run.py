@@ -9,11 +9,13 @@ Benchmarks:
   table3_*            — final multimodal/unimodal accuracy per algorithm
                         (paper Table 3; reads benchmarks/results/repro if the
                         full experiment ran, else runs a short version)
-  v_frontier_*        — Fig.-4 V-frontier: dense V grid, whole fused
-                        experiments per (policy, V) sharded over the local
-                        devices, multimodal + unimodal eval metrics per point
-                        (``--v-frontier`` runs only this and writes
-                        BENCH_v_frontier.json; see benchmarks/v_frontier.py)
+  v_frontier_*        — Fig.-4/Table-3 V-frontier: dense V grid, whole fused
+                        experiments per (policy, V) — JCSBA + all four traced
+                        baselines incl. dropout — sharded over the local
+                        devices, with device-resident multimodal + unimodal
+                        accuracy curves per point (``--v-frontier`` runs only
+                        this and writes BENCH_v_frontier.json; see
+                        benchmarks/v_frontier.py)
   solver_runtime      — JCSBA per-round solve time (paper §VI: 0.008 s)
   bound_descent       — Theorem-2 bound vs measured loss descent
   kernel_*            — Pallas kernel oracles (interpret) + XLA-path timing
@@ -77,29 +79,33 @@ def bench_table3(quick: bool):
 
 
 def bench_v_frontier(quick: bool):
-    """Fig.-4 V-frontier via the sharded fused V-grid scan: dense V grid,
-    whole experiments per (policy, V), multimodal + unimodal eval metrics —
-    replaces the old 5-point energy-only host-loop fig4 scan."""
-    from benchmarks.v_frontier import run_frontier
+    """Fig.-4 / Table-3 V-frontier via the sharded fused V-grid scan: dense
+    V grid, whole experiments per (policy, V) for JCSBA + all four traced
+    baselines (dropout included), with device-resident accuracy *curves* at
+    the eval_every cadence — zero host eval calls inside the scan."""
+    from benchmarks.v_frontier import check_curves, run_frontier
     if TINY:
-        out = run_frontier(("jcsba", "random"), V_grid=[0.01, 0.1, 1.0, 10.0],
-                           K=6, rounds=4, n_samples=120)
+        out = run_frontier(("jcsba", "random", "dropout"),
+                           V_grid=[0.01, 0.1, 1.0, 10.0],
+                           K=6, rounds=4, n_samples=120, eval_every=2)
     elif quick:
-        out = run_frontier(("jcsba", "random"),
+        out = run_frontier(("jcsba", "random", "dropout"),
                            V_grid=[0.001, 0.01, 0.1, 1.0, 10.0, 100.0],
-                           rounds=16)
+                           rounds=16, eval_every=4)
     else:
-        out = run_frontier(("jcsba", "random", "round_robin", "selection"))
+        out = run_frontier()                # all five policies, dense grid
+    check_curves(out)
     PAYLOADS["v_frontier"] = out
     for pol, rows in out["policies"].items():
         for r in rows:
             mods = [k for k in r if k not in
                     ("V", "multimodal", "loss", "energy_J",
-                     "mean_participants")]
+                     "mean_participants", "curve")]
             emit(f"v_frontier_{pol}_V={r['V']:g}", 0.0,
                  f"mm={r['multimodal']:.4f};"
                  + ";".join(f"{m}={r[m]:.4f}" for m in sorted(mods))
-                 + f";E={r['energy_J']:.4f}J;part={r['mean_participants']}")
+                 + f";E={r['energy_J']:.4f}J;part={r['mean_participants']};"
+                 f"curve_pts={len(r['curve']['round'])}")
 
 
 def bench_solver_runtime(quick: bool):

@@ -1,14 +1,18 @@
-"""Fig.-4-style V-frontier: whole fused experiments over a dense drift-penalty
-grid, with real eval metrics per V — JCSBA against the traced baselines.
+"""Fig.-4 / Table-3 V-frontier: whole fused experiments over a dense
+drift-penalty grid, with device-resident accuracy *curves* per (policy, V) —
+JCSBA against all four traced baselines (random / round_robin / selection /
+dropout).
 
 For every policy, every V in the grid runs a complete R-round MFL experiment
-(schedule → masked cohort BGD → Eq. 12 aggregation → queue/tracker refresh)
-under one ``jit(vmap(scan))`` via ``FusedRoundEngine.scan_v_grid`` — sharded
-across the local devices' ``("scenario",)`` mesh when more than one is
-available.  The per-V *final global models* are then evaluated on the held-out
-test split on host, so each frontier point carries multimodal + per-modality
-accuracy, not just energy/participation — this replaces the old 5-point
-energy-only ``fig4`` scan in benchmarks/run.py.
+(schedule → masked cohort BGD → Eq. 12 aggregation → queue/tracker refresh →
+held-out eval) under one ``jit(vmap(scan))`` via ``FusedRoundEngine.
+scan_v_grid`` — sharded across the local devices' ``("scenario",)`` mesh when
+more than one is available.  Test metrics are computed *inside* the scan at
+the ``--eval-every`` cadence (``fl.eval`` behind ``RoundXs.eval_flag``, final
+round always included), so each frontier point carries a multimodal +
+per-modality accuracy curve with **zero host eval calls** — the old version
+paid n_V ``adapter.evaluate`` round-trips per policy and reported only final
+metrics.
 
 Baselines ignore V (their traced cores read only ``B_max``), so their rows
 are the flat reference lines of the paper's Fig. 4; JCSBA's rows trace the
@@ -27,13 +31,15 @@ import numpy as np
 
 DENSE_V_GRID = [0.0001, 0.001, 0.01, 0.05, 0.1, 0.5, 1.0, 2.0, 5.0, 10.0,
                 50.0, 100.0]
+ALL_POLICIES = ("jcsba", "random", "round_robin", "selection", "dropout")
 
 
-def run_frontier(policies: Sequence[str] = ("jcsba", "random"),
+def run_frontier(policies: Sequence[str] = ALL_POLICIES,
                  V_grid: Optional[Sequence[float]] = None,
                  K: int = 10, rounds: int = 40, dataset: str = "iemocap",
                  n_samples: Optional[int] = None, seed: int = 0,
-                 E_add: float = 2e-4, mesh="auto") -> dict:
+                 E_add: float = 2e-4, eval_every: int = 5,
+                 mesh="auto") -> dict:
     import jax
     from benchmarks.fused_round import _make_experiment, _n_samples
     from repro.fl.fused_round import draw_round_xs
@@ -42,38 +48,68 @@ def run_frontier(policies: Sequence[str] = ("jcsba", "random"),
     n = n_samples or max(_n_samples(K), 200)
     out = {"benchmark": "v_frontier", "dataset": dataset, "K": K,
            "rounds": rounds, "seed": seed, "E_add": E_add,
+           "eval_every": eval_every,
            "V_grid": [float(v) for v in V_grid],
            "devices": len(jax.devices()),
            "regime": "fused whole-experiment scan per (policy, V); E_add "
-                     "shrunk so the C5 energy constraint binds; eval on the "
-                     "20% held-out split of the synthetic cohort",
+                     "shrunk so the C5 energy constraint binds; device-"
+                     "resident eval on the 20% held-out split at the "
+                     "eval_every cadence (final round always evaluated)",
            "policies": {}}
     for pol in policies:
         exp = _make_experiment(dataset, K, n, seed=seed, fused=True,
                                E_add=E_add, scheduler=pol)
         eng = exp._get_fused_engine()
-        xs = draw_round_xs(exp, rounds)
+        xs = draw_round_xs(exp, rounds, eval_every=eval_every,
+                           include_final=True)
         carries, auxs = jax.block_until_ready(
             eng.scan_v_grid(V_grid, exp._carry, xs, mesh=mesh))
         ok = np.asarray(auxs.ok)                       # [n_V, R, K]
         energy = np.asarray(carries.spent).sum(-1)     # [n_V]
+        emask = np.asarray(auxs.eval_mask)             # [n_V, R]
+        metrics = {k: np.asarray(v)                    # each [n_V, R]
+                   for k, v in auxs.metrics.items()}
         rows: List[dict] = []
         for i, V in enumerate(V_grid):
-            params_i = jax.tree.map(lambda x: x[i], carries.params)
-            metrics = exp.adapter.evaluate(params_i, exp.test_ds)
+            pts = np.flatnonzero(emask[i])
+            curve = {"round": [int(t) for t in pts]}
+            for k, v in metrics.items():
+                curve[k] = [round(float(v[i, t]), 4) for t in pts]
+            final = {k: curve[k][-1] for k in metrics}
             rows.append({
                 "V": float(V),
-                "multimodal": round(metrics["multimodal"], 4),
-                **{m: round(metrics[m], 4) for m in exp.all_mods},
-                "loss": round(metrics["loss"], 4),
+                "multimodal": final["multimodal"],
+                **{m: final[m] for m in exp.all_mods},
+                "loss": final["loss"],
                 "energy_J": round(float(energy[i]), 5),
                 "mean_participants": round(float(ok[i].sum(-1).mean()), 2),
+                "curve": curve,
             })
-            print(f"{pol:12s} V={V:<8g} mm={rows[-1]['multimodal']:.4f} "
+            print(f"{pol:12s} V={V:<8g} mm={final['multimodal']:.4f} "
                   f"E={rows[-1]['energy_J']:.4f}J "
-                  f"part={rows[-1]['mean_participants']}", flush=True)
+                  f"part={rows[-1]['mean_participants']} "
+                  f"curve_pts={len(pts)}", flush=True)
         out["policies"][pol] = rows
     return out
+
+
+def check_curves(out: dict) -> None:
+    """Assert the Table-3 artifact is genuinely curve-bearing: every
+    (policy, V) row has a curve whose round axis is strictly increasing,
+    whose metric tracks all share that length, and whose final point equals
+    the row's headline metrics.  CI runs this on the smoke artifact."""
+    assert out["policies"], "no policies in artifact"
+    for pol, rows in out["policies"].items():
+        assert len(rows) == len(out["V_grid"]), pol
+        for r in rows:
+            curve = r.get("curve")
+            assert curve and curve["round"], (pol, r.get("V"))
+            rnds = curve["round"]
+            assert all(b > a for a, b in zip(rnds, rnds[1:])), (pol, rnds)
+            assert rnds[-1] == out["rounds"] - 1, (pol, rnds)
+            for k, vals in curve.items():
+                assert len(vals) == len(rnds), (pol, k)
+            assert r["multimodal"] == curve["multimodal"][-1]
 
 
 def main(argv: Optional[List[str]] = None) -> dict:
@@ -81,15 +117,26 @@ def main(argv: Optional[List[str]] = None) -> dict:
     ap.add_argument("--tiny", action="store_true",
                     help="CI smoke: K=6, 4 rounds, 4-point V grid")
     ap.add_argument("--rounds", type=int, default=None)
-    ap.add_argument("--policies", default="jcsba,random")
+    ap.add_argument("--policies", default=",".join(ALL_POLICIES))
+    ap.add_argument("--eval-every", type=int, default=None,
+                    help="device-eval cadence inside the scan (rounds); "
+                         "the final round is always evaluated")
+    ap.add_argument("--check-curves", action="store_true",
+                    help="validate the curve fields of the artifact "
+                         "(strictly increasing rounds, consistent lengths)")
     ap.add_argument("--json-out", default=None)
     args = ap.parse_args(argv)
     policies = tuple(args.policies.split(","))
     if args.tiny:
         out = run_frontier(policies, V_grid=[0.01, 0.1, 1.0, 10.0], K=6,
-                           rounds=args.rounds or 4, n_samples=120)
+                           rounds=args.rounds or 4, n_samples=120,
+                           eval_every=args.eval_every or 2)
     else:
-        out = run_frontier(policies, rounds=args.rounds or 40)
+        out = run_frontier(policies, rounds=args.rounds or 40,
+                           eval_every=args.eval_every or 5)
+    if args.check_curves:
+        check_curves(out)
+        print("curve check OK")
     if args.json_out:
         with open(args.json_out, "w") as f:
             json.dump(out, f, indent=2)

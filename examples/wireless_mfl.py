@@ -24,12 +24,12 @@ def main():
                          "numpy mirror (np), or the original sequential "
                          "scalar path (seq)")
     ap.add_argument("--fused", action="store_true",
-                    help="run on the fused round engine: whole rounds as one "
-                         "jitted program, scanned in eval_every-sized chunks "
-                         "so the accuracy curve is still recorded.  Applies "
-                         "to every algorithm with a traced policy core "
-                         "(jcsba/random/round_robin/selection; requires "
-                         "--solver jax); dropout stays on the host loop")
+                    help="run on the fused round engine: the whole experiment "
+                         "as one lax.scan, with the accuracy curve recorded "
+                         "by the device-resident eval at the eval_every "
+                         "cadence.  Applies to every algorithm "
+                         "(jcsba/random/round_robin/selection/dropout; "
+                         "requires --solver jax)")
     ap.add_argument("--out", default="examples/out_wireless_mfl.json")
     args = ap.parse_args()
     if args.fused and args.solver != "jax":
@@ -38,22 +38,16 @@ def main():
     eval_every = 4
     results = {}
     for algo in [args.baseline, "jcsba"]:
-        fused = args.fused and algo != "dropout"
+        fused = args.fused
         print(f"=== {algo}{' (fused)' if fused else ''} ===")
         exp = MFLExperiment(dataset=args.dataset, scheduler=algo,
                             n_samples=args.n_samples, seed=0,
                             eval_every=eval_every, solver=args.solver,
                             fused=fused)
         if fused:
-            # one lax.scan per eval chunk, with chunk boundaries landing on
-            # the t % eval_every == 0 grid (first chunk is a single round)
-            # so the fused curve samples the same rounds as the host loop's
-            done = 0
-            while done < args.rounds:
-                chunk = 1 if done == 0 else min(eval_every,
-                                                args.rounds - done)
-                exp.run_scanned(chunk)
-                done += chunk
+            # one scan for the whole run: the device-resident eval samples
+            # the same t % eval_every == 0 rounds as the host loop records
+            exp.run_scanned(args.rounds)
         else:
             exp.run(args.rounds, verbose=False)
         fin = exp.final_metrics()

@@ -10,7 +10,7 @@ property tested in tests/test_aggregation.py.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Mapping, Sequence
+from typing import Dict, List, Mapping, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -109,6 +109,28 @@ def aggregate_gradients_stacked(stacked_grads: Mapping[str, object],
 # round engine (fl/fused_round.py).  Equivalence with the host versions is
 # covered by tests/test_fused_round.py.
 # ---------------------------------------------------------------------------
+def upload_masks_traced(ok, has: Mapping[str, object],
+                        drop: Optional[Mapping[str, object]] = None
+                        ) -> Dict[str, object]:
+    """The Eq. 12 contributor masks as a traced program: client k contributes
+    to submodel m iff it participated (``ok`` — scheduled ∧ no transmission
+    failure), owns the modality (``has[m]``) and did not drop it this round
+    (``drop[m]``, the modality-dropout baseline's [28] per-round mask; None ⇒
+    no policy drops).  A dropped modality is therefore excluded from both the
+    masked local update and the Eq. 12 renormalisation — exactly the
+    sequential path's "absent from the upload" semantics
+    (``weights_from_uploads``); property-tested in
+    tests/test_fused_properties.py."""
+    ok = jnp.asarray(ok, bool)
+    out = {}
+    for m, h in has.items():
+        u = ok & jnp.asarray(h, bool)
+        if drop is not None and m in drop:
+            u = u & ~jnp.asarray(drop[m], bool)
+        out[m] = u
+    return out
+
+
 def stacked_weights_traced(D, upload_mask: Mapping[str, object]
                            ) -> Dict[str, object]:
     """Eq. 12 weights from traced contributor masks: ``upload_mask[m]`` is a

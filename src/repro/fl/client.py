@@ -21,6 +21,9 @@ import numpy as np
 from ..core import fusion
 from ..data.partition import ClientData
 from ..models import paper_models as pm
+from .eval import eval_metrics
+
+_eval_jit = jax.jit(eval_metrics)
 
 
 class PaperModelAdapter:
@@ -156,25 +159,14 @@ class PaperModelAdapter:
             labels, sample_mask, avail_f, seeds_j)
 
     # ------------------------------------------------------------------
-    @functools.lru_cache(maxsize=8)
-    def _eval_fn(self, mods: Tuple[str, ...]):
-        @jax.jit
-        def ev(params, feats, labels):
-            logits = pm.modal_logits(params, feats)
-            fused = fusion.fuse_logits(logits)
-            out = {"multimodal": fusion.accuracy(fused, labels),
-                   "loss": fusion.softmax_xent(fused, labels)}
-            for m in mods:
-                out[m] = fusion.accuracy(logits[m], labels)
-            return out
-
-        return ev
-
     def evaluate(self, params: Mapping[str, dict], test) -> Dict[str, float]:
+        # the one test-metric computation, shared with the fused round
+        # engine's device-resident eval (fl/eval.py single-sources it);
+        # jit specialisation per modality set / shapes is jax's own cache
         mods = tuple(sorted(test.features.keys()))
         feats = {m: jnp.asarray(test.features[m]) for m in mods}
         labels = jnp.asarray(test.labels)
-        out = self._eval_fn(mods)({m: params[m] for m in mods}, feats, labels)
+        out = _eval_jit({m: params[m] for m in mods}, feats, labels)
         return {k: float(v) for k, v in out.items()}
 
     def __hash__(self):   # lru_cache on methods needs a hashable self

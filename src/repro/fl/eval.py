@@ -1,0 +1,79 @@
+"""Device-resident test-set evaluation — the Table-3 metrics as a pure
+traced program.
+
+Every headline number of the paper (Table 3, Figs. 4-6) is a held-out-split
+metric: multimodal accuracy (Eq. 1 fused logits), per-modality unimodal
+accuracy, and the fused cross-entropy.  Historically those lived only in
+``PaperModelAdapter.evaluate`` — a host entry point — so the fused round
+engine had to hop to host for every curve point, and the V-frontier paid
+n_V ``adapter.evaluate`` round-trips per policy.
+
+``eval_metrics`` is the single source of that computation: a pure function
+of ``(params, feats, labels)`` built on the same ``models.paper_models.
+modal_logits`` forward pass the training step uses.  It is consumed three
+ways, all executing the identical ops:
+
+* ``PaperModelAdapter.evaluate`` jits it standalone (the host API);
+* ``FusedRoundEngine`` inlines it into the scanned round program behind a
+  per-round ``lax.cond`` flag (``RoundXs.eval_flag``), so experiments emit
+  accuracy *curves* at the ``eval_every`` cadence without leaving device;
+* ``eval_metrics_stacked`` vmaps it over a leading params axis — one call
+  evaluates a whole scenario grid's final models (the V-frontier's shape).
+
+Cross-path agreement (device-resident vs ``adapter.evaluate`` on the same
+params) is locked by tests/test_eval_fused.py.
+"""
+from __future__ import annotations
+
+from typing import Dict, Mapping, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core import fusion
+from ..models import paper_models as pm
+
+#: metric keys shared by every evaluation surface, before the per-modality
+#: accuracy entries
+BASE_METRICS = ("multimodal", "loss")
+
+
+def metric_keys(mods) -> Tuple[str, ...]:
+    """Canonical key order of an ``eval_metrics`` result dict."""
+    return BASE_METRICS + tuple(sorted(mods))
+
+
+def eval_metrics(params: Mapping[str, dict], feats: Mapping[str, jax.Array],
+                 labels: jax.Array) -> Dict[str, jax.Array]:
+    """Test-split metrics as f32 scalars: Eq. 1 fused accuracy (key
+    ``multimodal``), fused cross-entropy (``loss``) and one unimodal
+    accuracy per modality present in ``feats``.  Pure and traced-safe — the
+    fused round engine inlines it; the host adapter jits it."""
+    logits = pm.modal_logits({m: params[m] for m in feats}, dict(feats))
+    fused = fusion.fuse_logits(logits)
+    out = {"multimodal": fusion.accuracy(fused, labels),
+           "loss": fusion.softmax_xent(fused, labels)}
+    for m in feats:
+        out[m] = fusion.accuracy(logits[m], labels)
+    return out
+
+
+def nan_metrics(mods) -> Dict[str, jax.Array]:
+    """The skip-branch twin of ``eval_metrics``: same pytree structure and
+    dtypes, every value NaN — what ``lax.cond`` emits on rounds the eval
+    cadence skips (consumers gate on ``RoundAux.eval_mask``, never on the
+    filler values)."""
+    return {k: jnp.float32(jnp.nan) for k in metric_keys(mods)}
+
+
+def device_test_set(test_ds) -> Tuple[Dict[str, jax.Array], jax.Array]:
+    """Push a dataset's features/labels to device once (the fused engine
+    holds them for the experiment's lifetime)."""
+    feats = {m: jnp.asarray(x) for m, x in sorted(test_ds.features.items())}
+    return feats, jnp.asarray(test_ds.labels)
+
+
+def eval_metrics_stacked(stacked_params, feats, labels):
+    """``eval_metrics`` vmapped over a leading scenario axis of ``params`` —
+    evaluates e.g. every V-grid row's final model in one device call."""
+    return jax.vmap(lambda p: eval_metrics(p, feats, labels))(stacked_params)

@@ -23,14 +23,30 @@ Carry layout (``FusedCarry``, a pytree):
 * ``model_dist``  — ‖θ_k − θ⁰‖ bookkeeping (read by the Selection policy).
 
 Per-round inputs (``RoundXs``) are the only randomness the loop consumes:
-channel gains, the immune-search PRNG seed and per-client dropout seeds.
-They are pregenerated on host by ``draw_round_xs`` in exactly the order the
-host loop consumes its ``np.random.Generator`` stream (channel draws → solver
-seed → K client seeds — see ``MFLExperiment._draw_client_seeds``), which is
-what makes the fused path draw-for-draw equivalent to the host reference:
-with identical experiment seeds, participant sets match exactly and params /
-queues / trackers match to float32 reduction-order tolerance
-(tests/test_fused_round.py locks this contract).
+channel gains, the immune-search PRNG seed and per-client dropout seeds —
+plus the (deterministic) ``eval_flag`` marking rounds on the ``eval_every``
+grid.  They are pregenerated on host by ``draw_round_xs`` in exactly the
+order the host loop consumes its ``np.random.Generator`` stream (channel
+draws → solver seed → K client seeds — see
+``MFLExperiment._draw_client_seeds``), which is what makes the fused path
+draw-for-draw equivalent to the host reference: with identical experiment
+seeds, participant sets match exactly and params / queues / trackers match
+to float32 reduction-order tolerance (tests/test_fused_round.py locks this
+contract).
+
+Two per-round decision surfaces ride along since PR 5:
+
+* **modality dropout** — policies whose ``step_full`` emits a drop mask
+  ([28]'s baseline, ``wireless.policies.DropoutPolicy``) thread it into the
+  Eq. 12 upload masks (``core.aggregation.upload_masks_traced``), so the
+  last host-only scheduler now scans on device and the full Table-3
+  five-policy comparison is one fused program;
+* **device-resident eval** — rounds flagged by ``xs.eval_flag`` evaluate the
+  freshly aggregated globals on the held-out split inside the scan
+  (``fl.eval.eval_metrics`` behind ``lax.cond``; skipped rounds emit NaN
+  fillers gated by ``RoundAux.eval_mask``), so ``run_scanned`` and
+  ``scan_v_grid`` produce multimodal + unimodal accuracy *curves* with zero
+  host eval calls.
 
 Equivalence caveats (all covered by the tests' tolerances): the host loop
 keeps queues/trackers in float64 numpy between the f32 jitted stages, while
@@ -40,7 +56,7 @@ does not move the solver's argmin on the tested configs.
 from __future__ import annotations
 
 import time
-from typing import Any, Dict, NamedTuple
+from typing import Any, Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -49,6 +65,7 @@ from jax import lax
 
 from ..core import aggregation as agg
 from ..core.convergence import tracker_update_masked
+from .eval import device_test_set, eval_metrics, nan_metrics
 from ..launch.mesh import make_sweep_mesh
 from ..launch.sharding import (pad_leading_axis, scenario_shard_map,
                                slice_leading_axis)
@@ -74,6 +91,7 @@ class RoundXs(NamedTuple):
     h: jax.Array                # [K] channel gains (float32)
     draw_seed: jax.Array        # scalar uint32 — immune-search key seed
     client_seeds: jax.Array     # [K] uint32 — per-client dropout seeds
+    eval_flag: jax.Array        # scalar bool — evaluate this round's globals
 
 
 class RoundAux(NamedTuple):
@@ -84,9 +102,13 @@ class RoundAux(NamedTuple):
     J: jax.Array                # scalar solver objective J₂(a*)
     weights: Dict[str, jax.Array]   # Eq. 12 weights w^t_{k,m}
     energy_total: jax.Array     # scalar Σ_k cumulative energy after round
+    drop: Dict[str, jax.Array]  # {m: [K] bool} — modality dropped this round
+    metrics: Dict[str, jax.Array]   # test metrics (NaN when not evaluated)
+    eval_mask: jax.Array        # scalar bool — ``metrics`` is real
 
 
-def draw_round_xs(exp, rounds: int) -> RoundXs:
+def draw_round_xs(exp, rounds: int, eval_every: Optional[int] = None,
+                  include_final: bool = False) -> RoundXs:
     """Consume ``rounds`` rounds of the experiment's host randomness in the
     canonical order — one host-loop round exactly: K channel draws
     (``Channel.draw``), one policy seed (the single ``rng.integers(2 ** 31)``
@@ -94,16 +116,29 @@ def draw_round_xs(exp, rounds: int) -> RoundXs:
     the per-client dropout seeds via the experiment's own
     ``_draw_client_seeds`` so that contract stays single-sourced.  A fused
     experiment and a host-loop experiment sharing the same seed therefore
-    walk the identical ``np.random`` stream."""
+    walk the identical ``np.random`` stream.
+
+    ``eval_flag`` is deterministic, not random: round t is flagged exactly
+    when the host loop would evaluate it (``(exp._round + t) % eval_every ==
+    0``; ``eval_every`` defaults to the experiment's).  ``include_final``
+    additionally flags the last round — sweep drivers use it so every
+    scenario's curve ends with the final model's metrics whatever the
+    cadence."""
     K = exp.params.K
+    ee = int(exp.eval_every if eval_every is None else eval_every)
     h = np.empty((rounds, K), np.float32)
     draw = np.empty(rounds, np.uint32)
     cseed = np.empty((rounds, K), np.uint32)
+    flags = np.zeros(rounds, bool)
     for t in range(rounds):
         h[t] = exp.channel.draw()
         draw[t] = exp.rng.integers(2 ** 31)
         cseed[t] = exp._draw_client_seeds()
-    return RoundXs(jnp.asarray(h), jnp.asarray(draw), jnp.asarray(cseed))
+        flags[t] = (exp._round + t) % ee == 0
+    if include_final and rounds:
+        flags[-1] = True
+    return RoundXs(jnp.asarray(h), jnp.asarray(draw), jnp.asarray(cseed),
+                   jnp.asarray(flags))
 
 
 class FusedRoundEngine:
@@ -111,7 +146,8 @@ class FusedRoundEngine:
 
     Built lazily by ``MFLExperiment`` (fused=True).  Holds the static,
     device-resident context — padded cohort stack, per-client costs, solver
-    template, tracker constants — and exposes:
+    template, tracker constants, the held-out test split for the in-scan
+    eval — and exposes:
 
     * ``step(carry, xs)``  — one jitted round;
     * ``scan(carry, xs)``  — R rounds under one ``lax.scan`` (xs stacked);
@@ -157,6 +193,16 @@ class FusedRoundEngine:
         self._labels, self._smask = labels, smask
         self._init_params = jax.tree.map(jnp.asarray, exp.init_params)
         self._cohort = exp.adapter.cohort_step(tuple(self.mods))
+
+        # device-resident eval context: the held-out split lives on device
+        # for the engine's lifetime; rounds flagged by xs.eval_flag run the
+        # shared fl.eval.eval_metrics program on the fresh globals
+        self._test_feats, self._test_labels = device_test_set(exp.test_ds)
+
+        # drop-mask row -> engine modality index, for policies with dropout
+        # (step_full's mask rows follow policy.drop_mods; empty otherwise)
+        self._drop_rows = {m: i for i, m in
+                           enumerate(getattr(self.policy, "drop_mods", ()))}
 
         self._jit_step = jax.jit(self._round_step)
         self._jit_scan = jax.jit(self._scan_steps)
@@ -209,7 +255,7 @@ class FusedRoundEngine:
         data["Q"], data["h"] = carry.Q, xs.h
         data["zeta2"] = jnp.square(carry.zeta)
         data["delta2"] = jnp.square(carry.delta)
-        pstate, a, B, J = self.policy.step(
+        pstate, a, B, J, drop_rows = self.policy.step_full(
             carry.policy, data, carry.model_dist,
             jax.random.PRNGKey(xs.draw_seed))
 
@@ -219,14 +265,18 @@ class FusedRoundEngine:
         tcom = jnp.where(a, data["gamma"] / jnp.maximum(r, 1e-30), 0.0)
         ok = a & (tcom + self._tau_cmp <= self._tau_max + 1e-12)
 
-        # 3. masked whole-cohort BGD updates (Eq. 7) — none of the traced
-        # policies drops a modality (only the host-only dropout baseline
-        # does), so the upload mask is participation ∧ ownership.  An
-        # empty round skips the BGD entirely (lax.cond), mirroring the host
-        # loop's early return: with every client masked the cohort's outputs
-        # are exactly the broadcast globals + zero gradients anyway, so the
-        # skip branch is bit-identical and costs only the solver.
-        upload = {m: ok & self._has[i] for i, m in enumerate(self.mods)}
+        # 3. masked whole-cohort BGD updates (Eq. 7) — the upload mask is
+        # participation ∧ ownership ∧ ¬dropped (the drop mask is all-False
+        # except under the dropout baseline, whose step_full emits per-round
+        # per-modality drop bits).  An empty round skips the BGD entirely
+        # (lax.cond), mirroring the host loop's early return: with every
+        # client masked the cohort's outputs are exactly the broadcast
+        # globals + zero gradients anyway, so the skip branch is
+        # bit-identical and costs only the solver.
+        drop = {m: drop_rows[i] for m, i in self._drop_rows.items()
+                if m in self.mods}       # empty for policies without dropout
+        upload = agg.upload_masks_traced(
+            ok, {m: self._has[i] for i, m in enumerate(self.mods)}, drop)
         avail = {m: upload[m].astype(jnp.float32) for m in self.mods}
 
         def run_cohort(args):
@@ -268,9 +318,18 @@ class FusedRoundEngine:
         d_sq = sum(dist_sq[m] * avail[m] for m in self.mods)
         model_dist = jnp.where(ok, jnp.sqrt(d_sq), carry.model_dist)
 
+        # 7. device-resident eval of the fresh globals on the held-out split
+        # (the host loop's adapter.evaluate, fused behind the cadence flag —
+        # only the branch that actually runs costs anything at runtime)
+        metrics = lax.cond(
+            xs.eval_flag,
+            lambda p: eval_metrics(p, self._test_feats, self._test_labels),
+            lambda p: nan_metrics(self._test_feats),
+            new_params)
+
         new_carry = FusedCarry(new_params, pstate, Qn, spent,
                                jnp.stack(zs), jnp.stack(ds), model_dist)
-        aux = RoundAux(a, ok, J, w, spent.sum())
+        aux = RoundAux(a, ok, J, w, spent.sum(), drop, metrics, xs.eval_flag)
         return new_carry, aux
 
     def _scan_steps(self, carry: FusedCarry, xs: RoundXs):

@@ -44,17 +44,18 @@ Fused round engine (``fused=True``)
 -----------------------------------
 The batched engine still hops to host between the jitted solver and the
 jitted client stage every round.  ``fused=True`` runs the *whole* round —
-steps 1-5 above — as one jitted program (fl/fused_round.py) for every
-scheduler with a traced policy core (jcsba / random / round_robin /
-selection — see ``wireless.policies``; only the host-only ``dropout``
-baseline and the np/seq JCSBA parity backends are excluded): ``run_round``
-becomes a thin host wrapper that pregenerates the round's randomness, calls
-the fused step and decodes the traced schedule arrays into a JSON-safe
-RoundRecord; ``run_scanned(R)`` drives R rounds under a single ``lax.scan``.
-Per-round host rng consumption is static (see ``_draw_client_seeds``; every
-policy draws exactly one solver seed per round), so all engines consume the
-identical stream and stay equivalent round by round
-(tests/test_fused_round.py, parametrized over all four policies).
+steps 1-6 above, test metrics included via the device-resident ``fl.eval``
+pass — as one jitted program (fl/fused_round.py) for every scheduler with a
+traced policy core (jcsba / random / round_robin / selection / dropout —
+see ``wireless.policies``; only the np/seq JCSBA parity backends are
+excluded): ``run_round`` becomes a thin host wrapper that pregenerates the
+round's randomness, calls the fused step and decodes the traced schedule /
+drop-mask / metric arrays into a JSON-safe RoundRecord; ``run_scanned(R)``
+drives R rounds under a single ``lax.scan``.  Per-round host rng consumption
+is static (see ``_draw_client_seeds``; every policy draws exactly one solver
+seed per round), so all engines consume the identical stream and stay
+equivalent round by round (tests/test_fused_round.py, parametrized over all
+five policies).
 """
 from __future__ import annotations
 
@@ -102,10 +103,13 @@ class RoundRecord:
     energy_total: float
     metrics: Dict[str, float]
     sched_time_s: float
+    #: modality -> sorted clients that dropped it this round ([28]'s
+    #: modality-dropout baseline; empty for every other policy)
+    dropped: Dict[str, List[int]] = dataclasses.field(default_factory=dict)
 
     @classmethod
     def make(cls, round, participants, failures, energy_total, metrics,
-             sched_time_s) -> "RoundRecord":
+             sched_time_s, dropped=None) -> "RoundRecord":
         """The one constructor both round engines use — normalizes every
         field through ``jnp_or_np`` so records are always JSON-safe."""
         return cls(int(jnp_or_np(round)),
@@ -113,7 +117,9 @@ class RoundRecord:
                    [int(v) for v in jnp_or_np(list(failures))],
                    float(jnp_or_np(energy_total)),
                    {k: float(jnp_or_np(v)) for k, v in metrics.items()},
-                   float(jnp_or_np(sched_time_s)))
+                   float(jnp_or_np(sched_time_s)),
+                   {str(m): sorted(int(k) for k in ks)
+                    for m, ks in (dropped or {}).items()})
 
 
 class MFLExperiment:
@@ -165,8 +171,9 @@ class MFLExperiment:
             raise ValueError(
                 f"fused=True requires a traced scheduling policy; "
                 f"scheduler={scheduler!r} with solver={solver!r} runs "
-                f"host-side only (traced cores exist for jcsba/random/"
-                f"round_robin/selection with solver='jax')")
+                f"host-side only (every scheduler has a traced core — "
+                f"jcsba/random/round_robin/selection/dropout — except "
+                f"JCSBA's np/seq parity backends)")
         self.model_dist = np.zeros(K)
         self.history: List[RoundRecord] = []
         self._round = 0
@@ -205,8 +212,14 @@ class MFLExperiment:
         metrics = {}
         if t % self.eval_every == 0:
             metrics = self.adapter.evaluate(self.global_params, self.test_ds)
+        dropped: Dict[str, List[int]] = {}
+        if dec.dropout_modality:
+            for k, m in enumerate(dec.dropout_modality):
+                if m is not None:
+                    dropped.setdefault(m, []).append(k)
         rec = RoundRecord.make(t, participants, failures,
-                               self.queues.spent.sum(), metrics, sched_time)
+                               self.queues.spent.sum(), metrics, sched_time,
+                               dropped)
         self.history.append(rec)
         self._round += 1
         return rec
@@ -222,19 +235,26 @@ class MFLExperiment:
             self._carry = self._fused_engine.init_carry()
         return self._fused_engine
 
-    def _decode_fused_round(self, t: int, aux, sched_time: float,
-                            with_metrics: bool) -> RoundRecord:
-        """Host-side decoder: traced schedule/energy arrays → RoundRecord."""
+    def _decode_fused_round(self, t: int, aux, sched_time: float
+                            ) -> RoundRecord:
+        """Host-side decoder: traced schedule/energy/eval arrays →
+        RoundRecord.  Metrics come from the device-resident eval — real only
+        on rounds the cadence flagged (``aux.eval_mask``); the NaN fillers of
+        skipped rounds never reach a record."""
         a = np.asarray(aux.a, bool)
         ok = np.asarray(aux.ok, bool)
         self.last_weights = {m: np.asarray(aux.weights[m])
                              for m in self.all_mods}
         metrics = {}
-        if with_metrics:
-            metrics = self.adapter.evaluate(self._carry.params, self.test_ds)
+        if bool(aux.eval_mask):
+            metrics = {k: float(v) for k, v in aux.metrics.items()}
+        dropped = {m: np.flatnonzero(np.asarray(d, bool))
+                   for m, d in aux.drop.items()}
         return RoundRecord.make(t, sorted(np.flatnonzero(ok)),
                                 sorted(np.flatnonzero(a & ~ok)),
-                                aux.energy_total, metrics, sched_time)
+                                aux.energy_total, metrics, sched_time,
+                                {m: ks for m, ks in dropped.items()
+                                 if len(ks)})
 
     def _run_round_fused(self) -> RoundRecord:
         # note: the record's sched_time_s holds the WHOLE fused-step wall
@@ -245,9 +265,7 @@ class MFLExperiment:
         xs = draw_round_xs(self, 1)
         xs = jax.tree.map(lambda x: x[0], xs)
         self._carry, aux, wall = eng.run(self._carry, xs, scanned=False)
-        rec = self._decode_fused_round(
-            self._round, aux, wall,
-            with_metrics=self._round % self.eval_every == 0)
+        rec = self._decode_fused_round(self._round, aux, wall)
         self.history.append(rec)
         self._round += 1
         # keep the public host-side mirrors (global_params, queues, bound,
@@ -260,14 +278,13 @@ class MFLExperiment:
         """R rounds under a single ``lax.scan`` — one device program for the
         whole stretch.  Per-round randomness is pregenerated in the canonical
         stream order, so the result is identical to R ``run_round()`` calls
-        (asserted bit-for-bit in tests/test_system.py).  Differences from the
-        host loop: test metrics are evaluated only when the *final* scanned
-        round lands on the ``eval_every`` grid (intermediate global params
-        never materialise on host — chunk scans so boundaries hit the grid to
-        build an eval curve, as examples/wireless_mfl.py does) and
-        ``sched_time_s`` records the mean per-round wall time of the whole
-        fused scan (compile included on the first call), not the host path's
-        scheduler-only time."""
+        (asserted bit-for-bit in tests/test_system.py).  Test metrics are
+        evaluated *inside* the scan on every round of the ``eval_every`` grid
+        (the device-resident ``fl.eval`` pass — intermediate global params
+        still never materialise on host), so one scan yields the full
+        accuracy curve; ``sched_time_s`` records the mean per-round wall time
+        of the whole fused scan (compile included on the first call), not the
+        host path's scheduler-only time."""
         if not self.fused:
             raise RuntimeError("run_scanned requires fused=True")
         from .fused_round import draw_round_xs
@@ -278,10 +295,7 @@ class MFLExperiment:
         recs = []
         for i in range(rounds):
             aux = jax.tree.map(lambda x: x[i], auxs)
-            recs.append(self._decode_fused_round(
-                start + i, aux, per,
-                with_metrics=(i == rounds - 1 and
-                              (start + i) % self.eval_every == 0)))
+            recs.append(self._decode_fused_round(start + i, aux, per))
         self.history.extend(recs)
         self._round += rounds
         eng.export_carry(self._carry)     # host mirrors stay live (see above)

@@ -25,6 +25,11 @@ exclusively from the per-round ``key`` (one ``rng.integers(2**31)`` host draw
 per round for every policy — the static rng discipline PR 3 established for
 JCSBA), so fused xs pregeneration stays draw-for-draw identical to the host
 loop for all policies.
+
+Policies whose decision includes *modality dropout* ([28]'s baseline) emit a
+per-modality drop mask as a fifth output of ``step_full`` — see
+:class:`DropoutPolicy`.  Policies without dropout inherit the default
+zero-row mask, so the fused engine consumes one uniform decision shape.
 """
 from __future__ import annotations
 
@@ -39,7 +44,7 @@ import numpy as np
 from .solver import SolverHyper
 from .solver.jaxsolver import solve_core
 
-POLICY_NAMES = ("jcsba", "random", "round_robin", "selection")
+POLICY_NAMES = ("jcsba", "random", "round_robin", "selection", "dropout")
 
 
 def equal_bandwidth_traced(a, B_max):
@@ -61,6 +66,9 @@ class SchedulePolicy:
     need (baselines: ``B_max``; JCSBA: the full solver context).
     """
     name = "base"
+    #: modality names addressing ``step_full``'s drop-mask rows (empty for
+    #: policies without dropout)
+    drop_mods: Tuple[str, ...] = ()
 
     def init_state(self) -> Dict[str, np.ndarray]:
         return {}
@@ -68,6 +76,14 @@ class SchedulePolicy:
     def step(self, state, data, model_dist, key):
         """-> (new_state, a [K] bool, B [K] f32, J scalar f32)."""
         raise NotImplementedError
+
+    def step_full(self, state, data, model_dist, key):
+        """-> (new_state, a, B, J, drop [M_drop, K] bool) — the full decision
+        including per-modality drop masks in ``self.drop_mods`` row order.
+        Policies without dropout emit the zero-row mask (M_drop = 0), so the
+        consumer can branch on the *static* row count at trace time."""
+        new_state, a, B, J = self.step(state, data, model_dist, key)
+        return new_state, a, B, J, jnp.zeros((0, a.shape[0]), bool)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -168,16 +184,89 @@ class SelectionPolicy(SchedulePolicy):
             jnp.float32(jnp.nan)
 
 
+def dropout_draws(key, K: int):
+    """The dropout baseline's per-client uniforms: ``(u_drop [K], u_which
+    [K])`` — drop-the-coin and which-modality draws for every client.
+
+    Client k's pair comes from ``fold_in(key, k)``, so a draw depends on
+    exactly (round key, client index): growing or shrinking the cohort never
+    perturbs the bits of the clients that remain (property-tested in
+    tests/test_fused_properties.py)."""
+    def one(k):
+        return jax.random.uniform(jax.random.fold_in(key, k), (2,))
+    u = jax.vmap(one)(jnp.arange(K, dtype=jnp.uint32))
+    return u[:, 0], u[:, 1]
+
+
+@dataclasses.dataclass(frozen=True)
+class DropoutPolicy(SchedulePolicy):
+    """[28]: random scheduling + modality dropout — scheduled *multimodal*
+    clients drop one uniformly-chosen owned modality with probability
+    ``p_drop`` (unimodal clients never drop, so nobody is ever dropped to
+    zero modalities).  The drop decision is part of the traced decision:
+    ``step_full`` emits a ``[M, K]`` drop mask whose rows follow
+    ``drop_mods`` (the cohort's modality names, sorted — the same order the
+    old host loop's ``rng.choice(sorted(mods))`` ranked candidates).
+
+    Ownership is static (``owns[i][k]`` ⇔ client k owns ``drop_mods[i]``),
+    so which-modality draws map to mask rows by the precomputed ownership
+    ranks; all randomness comes from the single round key: one split for the
+    schedule subset, one ``dropout_draws`` stream for the drop bits."""
+    K: int
+    drop_mods: Tuple[str, ...] = ()
+    owns: Tuple[Tuple[bool, ...], ...] = ()  # [M][K], static
+    n_sched: int = 4
+    p_drop: float = 0.3
+    name = "dropout"
+
+    @classmethod
+    def from_modalities(cls, K: int,
+                        client_modalities: Optional[Sequence[Sequence[str]]],
+                        n_sched: int = 4, p_drop: float = 0.3
+                        ) -> "DropoutPolicy":
+        mods = client_modalities or [("m",)] * K
+        names = tuple(sorted({m for ms in mods for m in ms}))
+        owns = tuple(tuple(m in ms for ms in mods) for m in names)
+        return cls(K, names, owns, n_sched, float(p_drop))
+
+    def drop_mask(self, a, key):
+        """[M, K] bool — modality ``drop_mods[i]`` dropped by client k."""
+        owns = jnp.asarray(self.owns, bool)                  # [M, K]
+        n_owned = owns.sum(0)                                # [K]
+        u_drop, u_which = dropout_draws(key, self.K)
+        do = jnp.asarray(a, bool) & (n_owned > 1) & (u_drop < self.p_drop)
+        # uniform pick among the client's owned modalities, in row order:
+        # rank[i, k] = #owned rows above i; the pick is the rank-th owned row
+        which = jnp.minimum((u_which * n_owned).astype(jnp.int32),
+                            jnp.maximum(n_owned - 1, 0))
+        rank = jnp.cumsum(owns, axis=0) - owns
+        return do[None] & owns & (rank == which[None])
+
+    def step(self, state, data, model_dist, key):
+        new_state, a, B, J, _ = self.step_full(state, data, model_dist, key)
+        return new_state, a, B, J
+
+    def step_full(self, state, data, model_dist, key):
+        k_sub, k_drop = jax.random.split(key)
+        n = min(self.n_sched, self.K)
+        perm = jax.random.permutation(k_sub, self.K)
+        a = jnp.zeros(self.K, bool).at[perm[:n]].set(True)
+        return state, a, equal_bandwidth_traced(a, data["B_max"]), \
+            jnp.float32(jnp.nan), self.drop_mask(a, k_drop)
+
+
 # ---------------------------------------------------------------------------
 # host entry point: one jitted step per (policy, pytree-signature)
 # ---------------------------------------------------------------------------
 @partial(jax.jit, static_argnames="policy")
 def policy_step(policy: SchedulePolicy, state, data, model_dist, seed):
-    """Jitted host-facing wrapper around ``policy.step``: derives the round's
-    ``jax.random`` key from the scalar ``seed`` (a uint32 array, NOT a Python
-    int — Python ints would retrace per round) exactly like the fused engine
-    does from ``xs.draw_seed``, so both paths consume identical bits."""
-    return policy.step(state, data, model_dist, jax.random.PRNGKey(seed))
+    """Jitted host-facing wrapper around ``policy.step_full``: derives the
+    round's ``jax.random`` key from the scalar ``seed`` (a uint32 array, NOT
+    a Python int — Python ints would retrace per round) exactly like the
+    fused engine does from ``xs.draw_seed``, so both paths consume identical
+    bits.  Returns the 5-tuple ``(state, a, B, J, drop)``; the drop mask has
+    zero rows for policies without dropout."""
+    return policy.step_full(state, data, model_dist, jax.random.PRNGKey(seed))
 
 
 def make_policy(name: str, K: int,
@@ -193,4 +282,8 @@ def make_policy(name: str, K: int,
     if name == "selection":
         return SelectionPolicy.from_modalities(K, client_modalities,
                                                kw.get("ratio", 0.4))
+    if name == "dropout":
+        return DropoutPolicy.from_modalities(K, client_modalities,
+                                             kw.get("n_sched", 4),
+                                             kw.get("p_drop", 0.3))
     raise ValueError(f"no traced policy named {name!r}")

@@ -15,12 +15,12 @@ host state (rng stream, policy state, ScheduleContext → device conversion)
 and jit the same traced core the fused round engine inlines — so the host
 loop and ``MFLExperiment(fused=True)`` agree by construction.
 
-RNG discipline: every policy-backed scheduler consumes exactly ONE
-``rng.integers(2**31)`` host draw per round (the seed of the round's
+RNG discipline: every policy-backed scheduler — Dropout included since its
+drop draws moved into the traced ``DropoutPolicy`` core — consumes exactly
+ONE ``rng.integers(2**31)`` host draw per round (the seed of the round's
 ``jax.random`` key), scheduled or not, feasible or not — the same static
-pattern ``fl.fused_round.draw_round_xs`` pregenerates.  ``DropoutScheduler``
-is the one exception (per-client host draws, no traced core) and therefore
-cannot run fused.
+pattern ``fl.fused_round.draw_round_xs`` pregenerates.  Only JCSBA's np/seq
+parity backends remain host-side.
 
 Policy state (JCSBA's warm-start antibody, Round-Robin's cursor) is exposed
 through ``state()/load_state()`` — the checkpointing API the runtime uses
@@ -62,14 +62,6 @@ class ScheduleDecision:
     B: np.ndarray                       # [K] Hz
     dropout_modality: Optional[List[Optional[str]]] = None
     objective: float = np.nan
-
-
-def _equal_bandwidth(a: np.ndarray, params: WirelessParams) -> np.ndarray:
-    B = np.zeros(len(a))
-    n = int(a.sum())
-    if n:
-        B[a] = params.B_max / n
-    return B
 
 
 class Scheduler:
@@ -155,13 +147,23 @@ class PolicyScheduler(Scheduler):
         draw_seed = np.uint32(self.rng.integers(2 ** 31))
         dist = (np.zeros(K) if ctx.model_dist is None else ctx.model_dist)
         state = {k: jnp.asarray(v) for k, v in self._state.items()}
-        state, a, B, J = policy_step(self._policy, state,
-                                     self._build_data(ctx),
-                                     jnp.asarray(dist, jnp.float32),
-                                     draw_seed)
+        state, a, B, J, drop = policy_step(self._policy, state,
+                                           self._build_data(ctx),
+                                           jnp.asarray(dist, jnp.float32),
+                                           draw_seed)
         self._state = {k: np.asarray(v) for k, v in state.items()}
+        # decode the traced drop mask (row order = policy.drop_mods) into the
+        # per-client dropout_modality list the FL runtime consumes
+        drops: Optional[List[Optional[str]]] = None
+        drop = np.asarray(drop, bool)
+        if drop.shape[0]:
+            drops = [None] * K
+            for i, m in enumerate(self._policy.drop_mods):
+                for k in np.flatnonzero(drop[i]):
+                    drops[k] = m
         return ScheduleDecision(np.asarray(a, bool),
                                 np.asarray(B, np.float64),
+                                dropout_modality=drops,
                                 objective=float(J))
 
 
@@ -206,30 +208,26 @@ class SelectionScheduler(PolicyScheduler):
                            ratio=self.ratio)
 
 
-class DropoutScheduler(Scheduler):
+class DropoutScheduler(PolicyScheduler):
     """[28]: random scheduling; multimodal clients drop one modality w.p. p.
 
-    Host-only: the per-client dropout draws are data-dependent host rng
-    consumption, so this baseline has no traced core and cannot run under
-    the fused engine."""
+    Formerly the one host-only baseline (its per-client drop draws were
+    data-dependent host rng); the draws now live in the traced
+    ``policies.DropoutPolicy`` core — pregenerated from the single round key,
+    one pair of uniforms per client — so Dropout schedules (and drops)
+    identically under the host loop and the fused engine."""
     name = "dropout"
 
     def __init__(self, rng: np.random.Generator, n_sched: int = 4,
                  p_drop: float = 0.3):
-        self.rng = rng
+        super().__init__(rng)
         self.n_sched = n_sched
         self.p_drop = p_drop
 
-    def schedule(self, ctx: ScheduleContext) -> ScheduleDecision:
-        K = len(ctx.h)
-        a = np.zeros(K, bool)
-        a[self.rng.choice(K, size=min(self.n_sched, K), replace=False)] = True
-        drops: List[Optional[str]] = [None] * K
-        mods = ctx.client_modalities or [()] * K
-        for k in range(K):
-            if a[k] and len(mods[k]) > 1 and self.rng.random() < self.p_drop:
-                drops[k] = str(self.rng.choice(sorted(mods[k])))
-        return ScheduleDecision(a, _equal_bandwidth(a, ctx.params), drops)
+    def _make_policy(self, K, client_modalities):
+        from .policies import make_policy
+        return make_policy(self.name, K, client_modalities,
+                           n_sched=self.n_sched, p_drop=self.p_drop)
 
 
 class JCSBAScheduler(PolicyScheduler):

@@ -5,6 +5,38 @@ import os
 # the mini dry-run test spawns a subprocess with its own XLA_FLAGS).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _purge_stale_bytecode(repo: str = None) -> list:
+    """Delete orphaned ``__pycache__`` bytecode before anything imports.
+
+    A ``.pyc`` whose source module was deleted or renamed silently shadows
+    the refactor: ``import foo`` keeps succeeding from the stale cache and
+    the suite tests code that no longer exists.  The CI no-bytecode guard
+    only protects the *tracked* tree, so local checkouts purge here (the
+    matching ``.gitignore`` patterns keep the dirs out of git).  Returns the
+    removed paths (exposed for the guard's own sanity check below)."""
+    repo = _REPO if repo is None else repo
+    removed = []
+    for top in ("src", "benchmarks", "tests", "examples"):
+        for dirpath, _dirnames, filenames in os.walk(os.path.join(repo, top)):
+            if os.path.basename(dirpath) != "__pycache__":
+                continue
+            srcdir = os.path.dirname(dirpath)
+            for fn in filenames:
+                if not fn.endswith((".pyc", ".pyo")):
+                    continue
+                mod = fn.split(".", 1)[0]
+                if not os.path.exists(os.path.join(srcdir, mod + ".py")):
+                    path = os.path.join(dirpath, fn)
+                    os.unlink(path)
+                    removed.append(os.path.relpath(path, repo))
+    return removed
+
+
+_purge_stale_bytecode()
+
 # If the real `hypothesis` is not installed, register the deterministic shim
 # BEFORE any test module is imported (property tests then replay a fixed
 # example set instead of failing at collection).

@@ -1,0 +1,104 @@
+"""Device-resident eval (fl/eval.py) vs the host ``ClientAdapter.evaluate``.
+
+The fused round engine evaluates the freshly aggregated globals *inside* the
+scanned program (``fl.eval.eval_metrics`` behind ``lax.cond``, flagged by
+``RoundXs.eval_flag``); the host API jits the same function standalone.  On
+the same params and test split the two must agree — multimodal accuracy,
+per-modality accuracy and loss — including on an empty-cohort round (params
+unchanged, eval still runs) and under an eval cadence > 1 inside one scan.
+"""
+import numpy as np
+import pytest
+
+from repro.fl.runtime import MFLExperiment
+from repro.wireless.params import WirelessParams
+
+CFG = dict(dataset="iemocap", n_samples=200, seed=3)
+
+
+def _assert_metrics_match(dev: dict, host: dict, atol=1e-6):
+    assert sorted(dev) == sorted(host)
+    for k in host:
+        assert dev[k] == pytest.approx(host[k], abs=atol), k
+
+
+def test_device_eval_matches_host_adapter_stepwise():
+    """Each fused run_round's record metrics come from the device eval of
+    that round's aggregated params — bit-comparable to adapter.evaluate on
+    the exported host mirror of the same params."""
+    fus = MFLExperiment(fused=True, scheduler="random", eval_every=1, **CFG)
+    for _ in range(3):
+        rec = fus.run_round()
+        # export_carry already mirrored the carry params to global_params
+        host = fus.adapter.evaluate(fus.global_params, fus.test_ds)
+        _assert_metrics_match(rec.metrics, host)
+
+
+def test_device_eval_empty_cohort_round():
+    """A starved bandwidth budget makes every scheduled client miss the
+    latency deadline — no participants, params unchanged — and the device
+    eval must still emit the (unchanged) model's metrics."""
+    params = WirelessParams(K=10, B_max=1e3)      # ~nothing to allocate
+    fus = MFLExperiment(fused=True, scheduler="random", eval_every=1,
+                        params=params, **CFG)
+    rec = fus.run_round()
+    assert rec.participants == []                  # genuinely empty round
+    host = fus.adapter.evaluate(fus.init_params, fus.test_ds)
+    _assert_metrics_match(rec.metrics, host)
+
+
+def test_device_eval_cadence_inside_scan():
+    """One run_scanned with eval_every=2: metrics exist exactly on the grid
+    rounds, NaN fillers never leak, and the final grid round's metrics match
+    the host eval of the scan's final params."""
+    fus = MFLExperiment(fused=True, scheduler="random", eval_every=2, **CFG)
+    fus.run_scanned(5)
+    assert [bool(r.metrics) for r in fus.history] == \
+        [True, False, True, False, True]
+    for r in fus.history:
+        assert all(np.isfinite(v) for v in r.metrics.values())
+    host = fus.adapter.evaluate(fus._carry.params, fus.test_ds)
+    _assert_metrics_match(fus.history[-1].metrics, host)
+
+
+def test_scanned_curve_matches_stepwise_curve():
+    """The scanned accuracy curve equals the stepwise fused curve point for
+    point — eval inside lax.scan is the same program as eval in the single
+    jitted step."""
+    step = MFLExperiment(fused=True, scheduler="round_robin", eval_every=2,
+                        **CFG)
+    scan = MFLExperiment(fused=True, scheduler="round_robin", eval_every=2,
+                        **CFG)
+    step.run(4)
+    scan.run_scanned(4)
+    for ra, rb in zip(step.history, scan.history):
+        assert sorted(ra.metrics) == sorted(rb.metrics)
+        for k in ra.metrics:
+            assert ra.metrics[k] == pytest.approx(rb.metrics[k], abs=1e-6)
+
+
+def test_v_grid_sweep_emits_curves_without_host_eval(monkeypatch):
+    """scan_v_grid's aux carries per-(V, round) metrics gated by eval_mask —
+    the whole Fig.-4/Table-3 curve machinery with zero adapter.evaluate
+    calls inside the scan."""
+    import jax
+
+    from repro.fl.fused_round import draw_round_xs
+
+    exp = MFLExperiment(fused=True, scheduler="random", eval_every=2, **CFG)
+    eng = exp._get_fused_engine()
+    xs = draw_round_xs(exp, 4, include_final=True)
+
+    calls = []
+    monkeypatch.setattr(exp.adapter, "evaluate",
+                        lambda *a, **k: calls.append(1))
+    carries, auxs = jax.block_until_ready(
+        eng.scan_v_grid([0.1, 1.0], exp._carry, xs))
+    assert not calls                               # zero host eval round-trips
+
+    mask = np.asarray(auxs.eval_mask)              # [n_V, R]
+    assert mask.shape == (2, 4)
+    np.testing.assert_array_equal(mask[0], [True, False, True, True])
+    mm = np.asarray(auxs.metrics["multimodal"])    # [n_V, R]
+    assert np.isfinite(mm[mask]).all()             # real metrics on the grid
+    assert np.isnan(mm[~mask]).all()               # NaN fillers off the grid

@@ -8,17 +8,23 @@ shim in tests/_hypothesis_fallback.py (registered by conftest).  Properties:
 * ``ClientCost.tau_residual`` is monotone in τ_max (the In1 budget can only
   grow with the latency budget);
 * the fused carry round-trips through tree flatten/unflatten unchanged — the
-  structural invariant ``lax.scan`` relies on.
+  structural invariant ``lax.scan`` relies on;
+* drop-bit semantics of the traced dropout baseline [28]: a dropped modality
+  never contributes to the Eq. 12 aggregation weights, no client is ever
+  dropped to zero modalities, and a client's drop draws depend on exactly
+  (round key, client index) — never on the rest of the cohort.
 """
 import jax
 import jax.numpy as jnp
 import numpy as np
 from hypothesis import given, settings, strategies as st
 
+from repro.core.aggregation import stacked_weights_traced, upload_masks_traced
 from repro.fl.fused_round import FusedCarry, RoundAux, RoundXs
 from repro.wireless.cost import ClientCost
 from repro.wireless.lyapunov import queue_update
 from repro.wireless.params import WirelessParams
+from repro.wireless.policies import DropoutPolicy, dropout_draws
 
 
 @settings(max_examples=20, deadline=None)
@@ -84,12 +90,90 @@ def test_round_pytrees_scan_compatible():
     """RoundXs/RoundAux slice along a leading axis like lax.scan needs."""
     K, R = 4, 3
     xs = RoundXs(h=jnp.zeros((R, K)), draw_seed=jnp.zeros(R, jnp.uint32),
-                 client_seeds=jnp.zeros((R, K), jnp.uint32))
+                 client_seeds=jnp.zeros((R, K), jnp.uint32),
+                 eval_flag=jnp.zeros(R, bool))
     x0 = jax.tree.map(lambda x: x[0], xs)
     assert isinstance(x0, RoundXs) and x0.h.shape == (K,)
+    assert x0.eval_flag.shape == ()
     aux = RoundAux(a=jnp.zeros(K, bool), ok=jnp.zeros(K, bool),
                    J=jnp.float32(0), weights={"m": jnp.zeros(K)},
-                   energy_total=jnp.float32(0))
+                   energy_total=jnp.float32(0),
+                   drop={"m": jnp.zeros(K, bool)},
+                   metrics={"multimodal": jnp.float32(jnp.nan)},
+                   eval_mask=jnp.zeros((), bool))
     stacked = jax.tree.map(lambda x: jnp.stack([x, x]), aux)
     assert isinstance(stacked, RoundAux)
     assert stacked.weights["m"].shape == (2, K)
+    assert stacked.drop["m"].shape == (2, K)
+    assert stacked.metrics["multimodal"].shape == (2,)
+
+
+# ---------------------------------------------------------------------------
+# drop-bit semantics of the traced dropout baseline [28]
+# ---------------------------------------------------------------------------
+def _random_cohort(rng, K, M=3):
+    """Random modality ownership with ≥1 modality per client."""
+    names = [f"m{i}" for i in range(M)]
+    mods = []
+    for _ in range(K):
+        n = int(rng.integers(1, M + 1))
+        mods.append(tuple(rng.choice(names, size=n, replace=False)))
+    return mods
+
+
+def _drop_round(K, seed, p_drop, n_sched=None):
+    rng = np.random.default_rng(seed)
+    mods = _random_cohort(rng, K)
+    pol = DropoutPolicy.from_modalities(K, mods, n_sched or max(K // 2, 1),
+                                        p_drop)
+    _, a, _B, _J, drop = pol.step_full(
+        {}, {"B_max": jnp.float32(10e6)}, jnp.zeros(K, jnp.float32),
+        jax.random.PRNGKey(seed))
+    return pol, np.asarray(a), np.asarray(drop)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 16), st.integers(0, 2 ** 31 - 1), st.floats(0.0, 1.0))
+def test_dropped_modality_never_weighted(K, seed, p_drop):
+    """A dropped modality is excluded from the Eq. 12 upload masks, so its
+    aggregation weight is exactly zero — whatever the participation set."""
+    pol, a, drop = _drop_round(K, seed, p_drop)
+    has = {m: jnp.asarray(np.asarray(pol.owns)[i], bool)
+           for i, m in enumerate(pol.drop_mods)}
+    drop_d = {m: jnp.asarray(drop[i], bool)
+              for i, m in enumerate(pol.drop_mods)}
+    upload = upload_masks_traced(jnp.asarray(a, bool), has, drop_d)
+    D = np.random.default_rng(seed).integers(1, 100, K)
+    w = stacked_weights_traced(jnp.asarray(D, jnp.float32), upload)
+    for i, m in enumerate(pol.drop_mods):
+        w_m = np.asarray(w[m])
+        assert (w_m[drop[i]] == 0).all()
+        assert (w_m[~np.asarray(pol.owns)[i]] == 0).all()
+        tot = w_m.sum()
+        assert tot == 0 or abs(tot - 1.0) < 1e-5
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 16), st.integers(0, 2 ** 31 - 1), st.floats(0.0, 1.0))
+def test_no_client_dropped_to_zero_modalities(K, seed, p_drop):
+    """Unimodal clients never drop; multimodal clients drop at most one
+    owned modality — so every scheduled client keeps ≥1 modality."""
+    pol, a, drop = _drop_round(K, seed, p_drop)
+    owns = np.asarray(pol.owns)
+    n_owned = owns.sum(0)
+    assert (drop <= owns).all()                     # drops are owned
+    assert (drop.sum(0) <= 1).all()                 # at most one per client
+    assert (drop.sum(0)[n_owned <= 1] == 0).all()   # unimodal never drops
+    assert ((n_owned - drop.sum(0)) >= 1).all()     # never to zero
+    assert (drop.sum(0) <= a).all()                 # only scheduled clients
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 12), st.integers(1, 8), st.integers(0, 2 ** 31 - 1))
+def test_drop_draws_depend_only_on_key_and_client_index(K, extra, seed):
+    """Growing the cohort must not perturb the surviving clients' drop
+    draws: ``dropout_draws`` is a per-client ``fold_in`` of the round key."""
+    key = jax.random.PRNGKey(seed)
+    small = np.stack(dropout_draws(key, K))
+    big = np.stack(dropout_draws(key, K + extra))
+    np.testing.assert_array_equal(small, big[:, :K])

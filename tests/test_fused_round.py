@@ -5,9 +5,10 @@ reference (both ``batched=True`` and ``batched=False``) must produce the same
 per-round participant sets, the same aggregated params to float32
 reduction-order tolerance, and matching queue / ζ-δ tracker state over ≥5
 rounds — the fused path's contract, parametrized over every traced scheduling
-policy (jcsba / random / round_robin / selection — the host wrappers and the
-fused engine drive the same ``wireless.policies`` cores, so the harness locks
-the whole policy layer, not just JCSBA).  Also locks the
+policy (jcsba / random / round_robin / selection / dropout — the host
+wrappers and the fused engine drive the same ``wireless.policies`` cores, so
+the harness locks the whole policy layer, not just JCSBA; for the dropout
+baseline the per-round modality drop masks must match too).  Also locks the
 zero-host-round-trips property (one trace for many rounds) and the
 JSON-safety of records built from device arrays.
 """
@@ -36,9 +37,11 @@ def _fused_vs_host(dataset, batched, rounds=5, scheduler="jcsba"):
 
 def _assert_equivalent(host, fus):
     # identical rng-stream consumption ⇒ identical schedules round by round
+    # (drop masks included — only the dropout policy's are ever non-empty)
     for ra, rb in zip(host.history, fus.history):
         assert ra.participants == rb.participants
         assert ra.failures == rb.failures
+        assert ra.dropped == rb.dropped
     # Eq. 12 weights of the last round
     for m in host.all_mods:
         np.testing.assert_allclose(host.last_weights[m],
@@ -87,16 +90,37 @@ def test_fused_round_compiles_once(policy):
 
 
 def test_fused_requires_traced_policy():
-    """Host-only schedulers (dropout, JCSBA's np/seq parity backends) have
-    no traced core and must be rejected up front."""
-    with pytest.raises(ValueError):
-        MFLExperiment(dataset="iemocap", scheduler="dropout", fused=True)
+    """The only schedulers without a traced core are JCSBA's np/seq parity
+    backends — they must be rejected up front.  Dropout (formerly host-only)
+    now runs fused; its acceptance is covered by the parametrized
+    equivalence tests above."""
     with pytest.raises(ValueError):
         MFLExperiment(dataset="iemocap", scheduler="jcsba", solver="seq",
                       fused=True)
     with pytest.raises(ValueError):
         MFLExperiment(dataset="iemocap", scheduler="jcsba", solver="np",
                       fused=True)
+
+
+def test_fused_dropout_records_drops():
+    """The tentpole acceptance: MFLExperiment(fused=True, scheduler="dropout")
+    runs scanned and the per-round drop masks reach the records (multimodal
+    scheduled clients only, one modality at most)."""
+    fus = MFLExperiment(dataset="iemocap", fused=True, scheduler="dropout",
+                        scheduler_kwargs={"p_drop": 0.9}, **CFG)
+    fus.run_scanned(6)
+    multi = [k for k, ms in enumerate(fus.client_mods) if len(ms) > 1]
+    seen = 0
+    for rec in fus.history:
+        sched = set(rec.participants) | set(rec.failures)
+        dropped_clients = [k for ks in rec.dropped.values() for k in ks]
+        assert len(dropped_clients) == len(set(dropped_clients))  # ≤1 each
+        for m, ks in rec.dropped.items():
+            assert m in fus.all_mods
+            for k in ks:
+                assert k in sched and k in multi
+        seen += len(dropped_clients)
+    assert seen > 0                     # p_drop=0.9 must actually drop
 
 
 # ---------------------------------------------------------------------------

@@ -14,15 +14,23 @@ import numpy as np
 import pytest
 
 from repro.fl.runtime import MFLExperiment
-from repro.wireless.policies import (POLICY_NAMES, RandomPolicy,
-                                     RoundRobinPolicy, SelectionPolicy,
-                                     make_policy, policy_step)
+from repro.wireless.policies import (POLICY_NAMES, DropoutPolicy,
+                                     RandomPolicy, RoundRobinPolicy,
+                                     SelectionPolicy, make_policy,
+                                     policy_step)
 
 DATA = {"B_max": jnp.float32(10e6)}
 DIST0 = jnp.zeros(8, jnp.float32)
 
 
 def _step(policy, state, dist=None, seed=0):
+    """Drive the jitted 5-tuple ``policy_step`` and return the classic
+    4-tuple (tests that care about drop masks unpack ``_step_full``)."""
+    new_state, a, B, J, _ = _step_full(policy, state, dist, seed)
+    return new_state, a, B, J
+
+
+def _step_full(policy, state, dist=None, seed=0):
     state = {k: jnp.asarray(v) for k, v in state.items()}
     dist = DIST0[:policy.K] if dist is None else jnp.asarray(dist, jnp.float32)
     return policy_step(policy, state, DATA, dist, np.uint32(seed))
@@ -71,12 +79,45 @@ def test_selection_policy_group_ratios_and_top_dist():
     np.testing.assert_allclose(np.asarray(B)[a], 10e6 / 4, rtol=1e-6)
 
 
+def test_dropout_policy_drop_mask_semantics():
+    """Scheduled multimodal clients drop at most one owned modality; the
+    non-dropout step() is the drop-free projection of step_full()."""
+    mods = [("a", "b")] * 4 + [("a",)] * 2 + [("b",)] * 2
+    pol = DropoutPolicy.from_modalities(8, mods, n_sched=6, p_drop=1.0)
+    assert pol.drop_mods == ("a", "b")
+    owns = np.asarray(pol.owns)
+    dropped_any = False
+    for seed in range(5):
+        state, a, B, J, drop = _step_full(pol, {}, seed=seed)
+        a, drop = np.asarray(a), np.asarray(drop)
+        assert drop.shape == (2, 8)
+        assert (drop <= owns).all()                 # only owned modalities
+        assert (drop.sum(0) <= a).all()             # only scheduled clients
+        # p_drop=1: every scheduled multimodal client drops exactly one
+        multi = owns.sum(0) > 1
+        np.testing.assert_array_equal(drop.sum(0), (a & multi).astype(int))
+        dropped_any |= drop.any()
+        # step() is step_full() minus the mask, on the same bits
+        _, a2, B2, _ = _step(pol, {}, seed=seed)
+        np.testing.assert_array_equal(a, np.asarray(a2))
+        np.testing.assert_allclose(np.asarray(B), np.asarray(B2))
+        assert np.isnan(float(J))
+    assert dropped_any
+
+
+def test_non_dropout_policies_emit_zero_row_drop_mask():
+    for name in ("random", "round_robin", "selection"):
+        pol = make_policy(name, 5, [("a",)] * 5)
+        *_, drop = _step_full(pol, pol.init_state())
+        assert drop.shape == (0, 5)
+
+
 def test_make_policy_factory_and_unknown_name():
     for name in POLICY_NAMES:
         pol = make_policy(name, 6, [("a",)] * 6)
         assert pol.K == 6 and pol.name == name
     with pytest.raises(ValueError):
-        make_policy("dropout", 6)       # host-only: no traced core
+        make_policy("no_such_policy", 6)
 
 
 def test_policy_state_is_scan_compatible_pytree():

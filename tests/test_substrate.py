@@ -142,3 +142,25 @@ def test_param_bits_matches_table2_order():
     image_bits = pm.param_bits(crema["image"])
     assert 1e5 < audio_bits < 5e6
     assert 1e5 < image_bits < 5e6
+
+
+# ---------------------------------------------------------------------------
+def test_stale_bytecode_purge_removes_orphans_only(tmp_path):
+    """conftest's session-start guard: a .pyc whose source module was deleted
+    must be purged (it would silently shadow the refactor on import); a .pyc
+    with a live source must survive."""
+    from conftest import _purge_stale_bytecode
+
+    pkg = tmp_path / "src" / "pkg"
+    cache = pkg / "__pycache__"
+    cache.mkdir(parents=True)
+    (pkg / "alive.py").write_text("x = 1\n")
+    (cache / "alive.cpython-310.pyc").write_bytes(b"live")
+    (cache / "deleted.cpython-310.pyc").write_bytes(b"stale")
+
+    removed = _purge_stale_bytecode(str(tmp_path))
+    assert [os.path.basename(p) for p in removed] == \
+        ["deleted.cpython-310.pyc"]
+    assert (cache / "alive.cpython-310.pyc").exists()
+    assert not (cache / "deleted.cpython-310.pyc").exists()
+    assert _purge_stale_bytecode(str(tmp_path)) == []   # idempotent
