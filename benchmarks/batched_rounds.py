@@ -25,7 +25,7 @@ import time
 from typing import List, Optional
 
 
-def _make_experiment(dataset: str, K: int, n_samples: int, batched: bool,
+def _make_experiment(dataset: str, K: int, n_samples: int, engine: str,
                      seed: int = 0):
     from repro.fl.runtime import MFLExperiment
     from repro.wireless.params import WirelessParams
@@ -33,12 +33,12 @@ def _make_experiment(dataset: str, K: int, n_samples: int, batched: bool,
     return MFLExperiment(dataset=dataset, scheduler="random", K=K,
                          n_samples=n_samples, seed=seed, eval_every=10 ** 9,
                          params=params, scheduler_kwargs={"n_sched": K},
-                         batched=batched)
+                         engine=engine)
 
 
 def _rounds_per_sec(dataset: str, K: int, rounds: int, n_samples: int,
-                    batched: bool) -> float:
-    exp = _make_experiment(dataset, K, n_samples, batched)
+                    engine: str) -> float:
+    exp = _make_experiment(dataset, K, n_samples, engine)
     exp.run_round()                               # warmup: compile + stack
     t0 = time.perf_counter()
     exp.run(rounds)
@@ -57,8 +57,8 @@ def run_benchmark(Ks: List[int], rounds: int = 5,
         for K in Ks:
             # 0.8 = train fraction; keep every client shard non-empty
             n = max(int(samples_per_client * K / 0.8), int(K / 0.8) + K)
-            seq = _rounds_per_sec(dataset, K, rounds, n, batched=False)
-            bat = _rounds_per_sec(dataset, K, rounds, n, batched=True)
+            seq = _rounds_per_sec(dataset, K, rounds, n, engine="seq")
+            bat = _rounds_per_sec(dataset, K, rounds, n, engine="batched")
             row = {"dataset": dataset, "K": K, "rounds": rounds,
                    "n_samples": n,
                    "seq_rounds_per_sec": round(seq, 4),

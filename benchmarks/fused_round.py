@@ -6,8 +6,8 @@ Three measurements:
 * ``per_round`` — wall-clock per full MFL round (JCSBA schedule + local
   updates + Eq. 12 aggregation + queue/tracker refresh) for three drivers on
   identical configs: the *split* pipeline (PR 2: jitted solver, host hop,
-  jitted batched clients, host aggregation/trackers — ``batched=True``), the
-  *fused* per-round program (``fused=True``, one jit per round), and the
+  jitted batched clients, host aggregation/trackers — ``engine="batched"``), the
+  *fused* per-round program (``engine="fused"``, one jit per round), and the
   fused program under ``run_scanned`` (R rounds per dispatch).  The
   acceptance number is fused-vs-split at K=50.
 * ``v_sweep`` — whole experiments vmapped over a V grid:
@@ -39,9 +39,9 @@ def _make_experiment(dataset: str, K: int, n_samples: int, seed: int = 0,
     # with the default absolute B_max, K=50 rounds degenerate to empty
     # schedules and the split pipeline never even runs its client stage
     params = WirelessParams(K=K, B_max=1e6 * K, E_add=E_add)
+    kw.setdefault("eval_every", 10 ** 9)      # benches skip eval by default
     return MFLExperiment(dataset=dataset, scheduler=scheduler, K=K,
-                         n_samples=n_samples, seed=seed, eval_every=10 ** 9,
-                         params=params, **kw)
+                         n_samples=n_samples, seed=seed, params=params, **kw)
 
 
 def _n_samples(K: int, samples_per_client: float = 2.0) -> int:
@@ -66,11 +66,12 @@ def bench_per_round(K: int, rounds: int, dataset: str = "iemocap"
         return (time.perf_counter() - t0) / rounds
 
     secs = {
-        "split": time_loop(_make_experiment(dataset, K, n, batched=True),
+        "split": time_loop(_make_experiment(dataset, K, n, engine="batched"),
                            use_scan=False),
-        "fused": time_loop(_make_experiment(dataset, K, n, fused=True),
+        "fused": time_loop(_make_experiment(dataset, K, n, engine="fused"),
                            use_scan=False),
-        "fused_scan": time_loop(_make_experiment(dataset, K, n, fused=True),
+        "fused_scan": time_loop(_make_experiment(dataset, K, n,
+                                                 engine="fused"),
                                 use_scan=True),
     }
     rows = []
@@ -98,8 +99,9 @@ def bench_v_sweep(K: int, rounds: int, V_grid, dataset: str = "iemocap",
     import jax
     from repro.fl.fused_round import draw_round_xs
 
-    exp = _make_experiment(dataset, K, _n_samples(K), seed=seed, fused=True,
-                           E_add=2e-4, scheduler=scheduler)
+    exp = _make_experiment(dataset, K, _n_samples(K), seed=seed,
+                           engine="fused", E_add=2e-4,
+                           scheduler=scheduler)
     eng = exp._get_fused_engine()
     carry = exp._carry
     xs = draw_round_xs(exp, rounds)

@@ -57,11 +57,11 @@ def run_frontier(policies: Sequence[str] = ALL_POLICIES,
                      "eval_every cadence (final round always evaluated)",
            "policies": {}}
     for pol in policies:
-        exp = _make_experiment(dataset, K, n, seed=seed, fused=True,
-                               E_add=E_add, scheduler=pol)
+        exp = _make_experiment(dataset, K, n, seed=seed, engine="fused",
+                               E_add=E_add, scheduler=pol,
+                               eval_every=eval_every)
         eng = exp._get_fused_engine()
-        xs = draw_round_xs(exp, rounds, eval_every=eval_every,
-                           include_final=True)
+        xs = draw_round_xs(exp, rounds, include_final=True)
         carries, auxs = jax.block_until_ready(
             eng.scan_v_grid(V_grid, exp._carry, xs, mesh=mesh))
         ok = np.asarray(auxs.ok)                       # [n_V, R, K]

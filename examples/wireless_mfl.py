@@ -19,31 +19,27 @@ def main():
     ap.add_argument("--dataset", default="crema_d")
     ap.add_argument("--n-samples", type=int, default=800)
     ap.add_argument("--baseline", default="random")
-    ap.add_argument("--solver", default="jax", choices=["jax", "np", "seq"],
-                    help="JCSBA backend: fused jitted batch (jax), float64 "
-                         "numpy mirror (np), or the original sequential "
-                         "scalar path (seq)")
-    ap.add_argument("--fused", action="store_true",
-                    help="run on the fused round engine: the whole experiment "
-                         "as one lax.scan, with the accuracy curve recorded "
-                         "by the device-resident eval at the eval_every "
-                         "cadence.  Applies to every algorithm "
-                         "(jcsba/random/round_robin/selection/dropout; "
-                         "requires --solver jax)")
+    ap.add_argument("--engine", default="batched",
+                    help="round engine spec '<loop>[:<backend>]': loop is "
+                         "seq (per-client reference), batched (default, one "
+                         "vmapped client stage per round) or fused (the "
+                         "whole experiment as one lax.scan with device-"
+                         "resident eval — every algorithm: jcsba/random/"
+                         "round_robin/selection/dropout); the optional "
+                         "backend picks the JCSBA solver for parity runs "
+                         "(jax default, np = float64 mirror, seq = original "
+                         "scalar path — host loops only)")
     ap.add_argument("--out", default="examples/out_wireless_mfl.json")
     args = ap.parse_args()
-    if args.fused and args.solver != "jax":
-        ap.error("--fused requires --solver jax")
 
     eval_every = 4
     results = {}
     for algo in [args.baseline, "jcsba"]:
-        fused = args.fused
+        fused = args.engine.partition(":")[0] == "fused"
         print(f"=== {algo}{' (fused)' if fused else ''} ===")
         exp = MFLExperiment(dataset=args.dataset, scheduler=algo,
                             n_samples=args.n_samples, seed=0,
-                            eval_every=eval_every, solver=args.solver,
-                            fused=fused)
+                            eval_every=eval_every, engine=args.engine)
         if fused:
             # one scan for the whole run: the device-resident eval samples
             # the same t % eval_every == 0 rounds as the host loop records

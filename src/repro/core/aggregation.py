@@ -177,6 +177,38 @@ def aggregate_gradients_stacked_traced(stacked_grads: Mapping[str, object],
         for m, g in stacked_grads.items()}
 
 
+# ---------------------------------------------------------------------------
+# Cohort-gather path (O(J), not O(K)).  The fused round engine gathers only
+# the scheduled cohort's rows (policies emit a static-size, duplicate-free
+# cohort index vector — wireless.policies.cohort_indices), so Eq. 12 runs as
+# the same traced helpers above over [J]-leading stacks: every contributor is
+# in the cohort by construction, so the renormalisation over J equals the
+# dense renormalisation over K.  What *is* new is the inverse map — cohort-
+# local results scattered back to dense [K] rows via a segment-sum over the
+# cohort indices (duplicate-free ⇒ a pure scatter) — used for the dense
+# per-round weight records and the ζ/δ tracker refresh
+# (convergence.tracker_update_cohort).  Equivalence with the dense masked
+# path is property-tested in tests/test_cohort_gather.py.
+# ---------------------------------------------------------------------------
+def scatter_cohort_rows(vals_c, idx, K: int):
+    """Segment-sum cohort-local values back to dense client rows.
+
+    ``vals_c`` [J, ...] holds one row per cohort slot, ``idx`` [J] int32 the
+    cohort's client indices (duplicate-free; padding slots carry exact-zero
+    rows or are masked upstream).  Returns [K, ...] with zeros at non-cohort
+    clients."""
+    return jax.ops.segment_sum(vals_c, idx, num_segments=K)
+
+
+def cohort_weights_dense(weights_c: Mapping[str, object], idx, K: int
+                         ) -> Dict[str, object]:
+    """Dense [K] Eq. 12 weight rows from cohort-local weights [J] — the
+    segment-sum scatter per modality (padding slots have zero weight, so the
+    scatter is exact)."""
+    return {m: scatter_cohort_rows(jnp.asarray(w, jnp.float32), idx, K)
+            for m, w in weights_c.items()}
+
+
 def aggregate(global_params: Mapping[str, object],
               client_params: List[Mapping[str, object]],
               weights: Mapping[str, np.ndarray]) -> Dict[str, object]:

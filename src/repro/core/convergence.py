@@ -230,6 +230,39 @@ def tracker_update_masked(zeta_m, delta_m, stacked_g, agg_g, mask, has_m,
             jnp.where(any_m, delta_new, delta_m))
 
 
+def tracker_update_cohort(zeta_m, delta_m, cohort_g, agg_g, mask_c, idx,
+                          has_m, staleness: float):
+    """Cohort-gather twin of ``tracker_update_masked``: the gradient stack
+    exists only for the gathered cohort ([J]-leading leaves), so per-client
+    divergence norms are computed cohort-locally — O(J·|θ|), not O(K·|θ|) —
+    and *scattered* into the dense [K] δ row through the duplicate-free
+    cohort index vector ``idx`` [J].  ``mask_c`` bool [J] marks real uploads
+    among the cohort slots (padding slots are False); ``has_m`` bool [K] is
+    dense ownership.  Cohort slots appear in ascending client order with
+    zeros elsewhere, so the fresh-mean reduction matches the dense path's
+    summation order bit for bit."""
+    mask_c = jnp.asarray(mask_c, bool)
+    has_m = jnp.asarray(has_m, bool)
+    J = mask_c.shape[0]
+    any_m = mask_c.any()
+    zeta_new = jnp.sqrt(sum(jnp.vdot(x, x).real
+                            for x in jax.tree.leaves(agg_g)))
+    sq = sum(jnp.square(gs - ga[None]).reshape(J, -1).sum(axis=1)
+             for gs, ga in zip(jax.tree.leaves(cohort_g),
+                               jax.tree.leaves(agg_g)))
+    norms_c = jnp.sqrt(sq)                                      # [J]
+    mean_d = (norms_c * mask_c).sum() / jnp.maximum(mask_c.sum(), 1)
+    decayed = staleness * delta_m + (1.0 - staleness) * mean_d
+    K = delta_m.shape[0]
+    uploaded = jnp.zeros(K, bool).at[idx].set(mask_c)
+    norms_k = jnp.zeros(K, delta_m.dtype).at[idx].set(
+        jnp.where(mask_c, norms_c, 0.0))
+    delta_new = jnp.where(uploaded, norms_k,
+                          jnp.where(has_m & ~uploaded, decayed, delta_m))
+    return (jnp.where(any_m, zeta_new, zeta_m),
+            jnp.where(any_m, delta_new, delta_m))
+
+
 # ---------------------------------------------------------------------------
 # Batched jnp port of a1_a2 / objective — the Theorem-1 term for a whole
 # antibody population A ∈ {0,1}^{P×K} as one fused array program.  Used by

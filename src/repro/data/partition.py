@@ -9,8 +9,9 @@ Fig. 1 where client 1 lacks image but keeps audio).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Mapping, Sequence, Tuple
 
+import jax
 import numpy as np
 
 from .synthetic import MultimodalDataset
@@ -84,6 +85,120 @@ def stack_clients(clients: Sequence[ClientData],
     sizes = np.array([c.size for c in clients], np.int64)
     return StackedClients(feats, labels, smask, has, sizes,
                           tuple(all_modalities))
+
+
+# ---------------------------------------------------------------------------
+# ClientStore — the device-resident population store the cohort-gather fused
+# round reads from.  Unlike StackedClients (a host-side staging structure),
+# the store is a registered pytree whose every data leaf carries a leading
+# client axis, so it (a) rides through jit/shard_map boundaries directly and
+# (b) shards over the 2-D mesh's "clients" axis (launch/sharding.py) — the
+# O(K·N·d) feature stacks live partitioned across devices while the round
+# program gathers only the scheduled cohort's J rows (``take``).
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ClientStore:
+    """Per-client population data, one leading client axis on every leaf.
+
+    * ``features[m]`` [K, N, ...] f32 (zero blocks for non-owners/padding)
+    * ``labels`` [K, N] i32 / ``sample_mask`` [K, N] f32
+    * ``has_modality[m]`` [K] bool
+    * ``sizes`` [K] f32 — D_k, the Eq. 12 weight numerators
+    * ``gamma_bits`` / ``tau_cmp`` / ``e_cmp`` [K] f32 — the wireless cost
+      vectors (Eqs. 15-18), gathered per cohort alongside the data
+
+    ``take(idx)`` gathers cohort rows into a J-sized store of the same
+    structure; under a client-sharded mesh each shard holds a K/n_shards
+    slice of every leaf and cohort gathers become masked cross-shard
+    reductions (fl/fused_round.py).
+    """
+    features: Dict[str, object]
+    labels: object
+    sample_mask: object
+    has_modality: Dict[str, object]
+    sizes: object
+    gamma_bits: object
+    tau_cmp: object
+    e_cmp: object
+    modalities: Tuple[str, ...]
+
+    @property
+    def K(self) -> int:
+        return int(self.labels.shape[0])
+
+    def take(self, idx) -> "ClientStore":
+        """Cohort gather: ``jnp.take`` over the client axis of every data
+        leaf (clipping gather — downstream availability masks neutralize any
+        padding slot)."""
+        import jax.numpy as jnp
+        idx = jnp.asarray(idx, jnp.int32)
+
+        def g(x):
+            return jnp.take(jnp.asarray(x), idx, axis=0)
+        return ClientStore({m: g(v) for m, v in self.features.items()},
+                           g(self.labels), g(self.sample_mask),
+                           {m: g(v) for m, v in self.has_modality.items()},
+                           g(self.sizes), g(self.gamma_bits),
+                           g(self.tau_cmp), g(self.e_cmp), self.modalities)
+
+
+jax.tree_util.register_dataclass(
+    ClientStore,
+    data_fields=["features", "labels", "sample_mask", "has_modality",
+                 "sizes", "gamma_bits", "tau_cmp", "e_cmp"],
+    meta_fields=["modalities"])
+
+
+def build_client_store(stacked: StackedClients, gamma_bits, tau_cmp,
+                       e_cmp) -> ClientStore:
+    """Assemble a ClientStore from a staged StackedClients plus the cohort's
+    wireless cost vectors (``wireless.cost.ClientCost`` arrays)."""
+    return ClientStore(
+        {m: np.asarray(v, np.float32) for m, v in stacked.features.items()},
+        np.asarray(stacked.labels, np.int32),
+        np.asarray(stacked.sample_mask, np.float32),
+        {m: np.asarray(v, bool) for m, v in stacked.has_modality.items()},
+        np.asarray(stacked.sizes, np.float32),
+        np.asarray(gamma_bits, np.float32),
+        np.asarray(tau_cmp, np.float32),
+        np.asarray(e_cmp, np.float32),
+        tuple(stacked.modalities))
+
+
+def synthetic_population(K: int, n_per_client: int,
+                         feature_shapes: Mapping[str, Sequence[int]],
+                         n_classes: int, omega: float,
+                         seed: int = 0) -> ClientStore:
+    """Vectorized population builder for O(10⁴–10⁶) clients.
+
+    ``partition``/``stack_clients`` loop per client in Python — fine at
+    K≈50, prohibitive at K=100k.  This builds the same modality-
+    heterogeneity structure (disjoint ⌊ωK⌋-sized missing sets per modality,
+    every client keeps ≥1 modality) with pure array ops.  Cost vectors are
+    returned as zeros; callers fill them via ``dataclasses.replace`` (see
+    benchmarks/population_scale.py, which vectorizes Eqs. 15-18)."""
+    rng = np.random.default_rng(seed)
+    mods = tuple(sorted(feature_shapes))
+    n_missing = int(np.floor(omega * K))
+    has: Dict[str, np.ndarray] = {}
+    order = rng.permutation(K)
+    c = 0
+    for m in mods:                       # disjoint blocks, like partition()
+        miss = np.zeros(K, bool)
+        miss[order[c:c + n_missing]] = True
+        has[m] = ~miss
+        c += n_missing
+        if c + n_missing > K:
+            c = 0
+    feats = {m: rng.standard_normal((K, n_per_client) + tuple(s),
+                                    np.float32) * has[m].reshape(
+                 (K,) + (1,) * (len(s) + 1))
+             for m, s in feature_shapes.items()}
+    labels = rng.integers(0, n_classes, (K, n_per_client)).astype(np.int32)
+    zeros = np.zeros(K, np.float32)
+    return ClientStore(feats, labels, np.ones((K, n_per_client), np.float32),
+                       has, np.full(K, float(n_per_client), np.float32),
+                       zeros, zeros.copy(), zeros.copy(), mods)
 
 
 def _dirichlet_shards(ds: MultimodalDataset, K: int, alpha: float,

@@ -1,5 +1,5 @@
-"""Fully on-device MFL rounds — schedule → local updates → Eq. 12
-aggregation → queue/tracker update as ONE jitted program per round.
+"""Fully on-device MFL rounds — schedule → cohort gather → local updates →
+Eq. 12 aggregation → queue/tracker update as ONE jitted program per round.
 
 PR 1 batched the client fan-out (fl/client.py) and PR 2 batched the server
 decision layer (wireless/solver/), but the runtime still hopped to host
@@ -9,6 +9,31 @@ single ``round_step(carry, xs) -> (carry, aux)`` whose carry packs the entire
 evolving experiment state, so ``lax.scan`` can drive whole experiments (and,
 vmapped, dense V/τ scenario grids — benchmarks/fused_round.py) without
 leaving the device.
+
+Cohort gather — the BGD hot path is O(J), not O(K)
+--------------------------------------------------
+Originally the round ran the masked BGD update over the *whole* dense client
+stack: every round touched K × max_batch × d features even though only a
+handful of clients are ever scheduled.  Policies now emit a static-size,
+duplicate-free cohort index vector (``wireless.policies.cohort_indices`` —
+the sixth ``step_full`` output), and the round body *gathers* exactly those
+J rows from a device-resident ``data.partition.ClientStore`` before the BGD
+stage:
+
+* single device — ``store.take(idx)`` (``jnp.take`` over the client axis);
+* client-sharded 2-D mesh — a masked cross-shard reduction (``_gather_rows``):
+  each shard contributes the cohort rows it owns, ``lax.psum`` over the
+  ``"clients"`` axis reassembles them bit-exactly.
+
+Everything model-sized downstream — the vmapped BGD, the Eq. 12 contraction
+(``core.aggregation``), the ζ/δ divergence norms
+(``core.convergence.tracker_update_cohort``) — runs on [J]-leading stacks;
+cohort-local results are scattered back to dense [K] rows through the index
+vector (a ``segment_sum``, exact because the indices are duplicate-free).
+Only O(K) *vector* physics stays dense: channel rates, latency feasibility,
+Lyapunov queues — cheap at any K.  Per-round latency and peak memory
+therefore scale with the cohort, not the population
+(benchmarks/population_scale.py: K = 50 → 100 000 at J ≈ 10).
 
 Carry layout (``FusedCarry``, a pytree):
 
@@ -51,28 +76,36 @@ Two per-round decision surfaces ride along since PR 5:
 Equivalence caveats (all covered by the tests' tolerances): the host loop
 keeps queues/trackers in float64 numpy between the f32 jitted stages, while
 the fused carry stays f32 end-to-end — per-round drift is ~1e-7 relative and
-does not move the solver's argmin on the tested configs.
+does not move the solver's argmin on the tested configs.  The cohort path
+adds no new caveat: cohort rows appear in ascending client order (stable
+argsort), so reductions see the same nonzero terms in the same order as the
+dense masked path, and interleaved exact zeros do not move f32 sums
+(property-tested in tests/test_cohort_gather.py).
 """
 from __future__ import annotations
 
+import functools
 import time
+import warnings
 from typing import Any, Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import lax
+from jax.sharding import PartitionSpec as P
 
 from ..core import aggregation as agg
-from ..core.convergence import tracker_update_masked
+from ..core.convergence import tracker_update_cohort
 from .eval import device_test_set, eval_metrics, nan_metrics
 from ..launch.mesh import make_sweep_mesh
-from ..launch.sharding import (pad_leading_axis, scenario_shard_map,
+from ..launch.sharding import (logical_pspec, pad_leading_axis,
+                               population_shard_map, scenario_shard_map,
                                slice_leading_axis)
 from ..wireless.lyapunov import queue_update
 from ..wireless.solver import build_solver_data
 from ..wireless.solver.common import B_LO
-from ..wireless.solver.jaxsolver import rate, to_device
+from ..wireless.solver.jaxsolver import _bmin, rate, to_device
 
 
 class FusedCarry(NamedTuple):
@@ -119,11 +152,20 @@ def draw_round_xs(exp, rounds: int, eval_every: Optional[int] = None,
     walk the identical ``np.random`` stream.
 
     ``eval_flag`` is deterministic, not random: round t is flagged exactly
-    when the host loop would evaluate it (``(exp._round + t) % eval_every ==
-    0``; ``eval_every`` defaults to the experiment's).  ``include_final``
-    additionally flags the last round — sweep drivers use it so every
-    scenario's curve ends with the final model's metrics whatever the
-    cadence."""
+    when the host loop would evaluate it (``(exp._round + t) %
+    exp.eval_every == 0``).  ``include_final`` additionally flags the last
+    round — sweep drivers use it so every scenario's curve ends with the
+    final model's metrics whatever the cadence.
+
+    ``eval_every`` is deprecated: the cadence is the *experiment's* setting,
+    duplicated here it silently desynchronised host-loop and fused curves.
+    Pass ``MFLExperiment(eval_every=...)`` instead."""
+    if eval_every is not None:
+        warnings.warn(
+            "draw_round_xs(eval_every=...) is deprecated; the eval cadence "
+            "comes from the experiment — construct "
+            "MFLExperiment(eval_every=...) instead",
+            DeprecationWarning, stacklevel=2)
     K = exp.params.K
     ee = int(exp.eval_every if eval_every is None else eval_every)
     h = np.empty((rounds, K), np.float32)
@@ -141,17 +183,44 @@ def draw_round_xs(exp, rounds: int, eval_every: Optional[int] = None,
                    jnp.asarray(flags))
 
 
+def _gather_rows(x, idx, axis_name: str):
+    """Cross-shard cohort gather under a client-sharded mesh.
+
+    ``x`` is this shard's [K_loc, ...] slice of a client-axis leaf; ``idx``
+    [J] holds *global* client indices (replicated).  Each shard contributes
+    the rows it owns (others zeroed), and ``lax.psum`` over the mesh axis
+    reassembles the full cohort — exact for every dtype here: each output
+    element receives exactly one nonzero contribution."""
+    K_loc = x.shape[0]
+    off = lax.axis_index(axis_name) * K_loc
+    local = idx - off
+    mine = (local >= 0) & (local < K_loc)
+    rows = jnp.take(x, jnp.clip(local, 0, K_loc - 1), axis=0)
+    orig = rows.dtype
+    if orig == jnp.bool_:
+        rows = rows.astype(jnp.int32)
+    shape = (idx.shape[0],) + (1,) * (rows.ndim - 1)
+    rows = jnp.where(mine.reshape(shape), rows, 0)
+    out = lax.psum(rows, axis_name)
+    return out.astype(orig) if orig == jnp.bool_ else out
+
+
 class FusedRoundEngine:
     """Per-experiment compiler/runner for the fused round program.
 
-    Built lazily by ``MFLExperiment`` (fused=True).  Holds the static,
-    device-resident context — padded cohort stack, per-client costs, solver
-    template, tracker constants, the held-out test split for the in-scan
-    eval — and exposes:
+    Built lazily by ``MFLExperiment`` (engine="fused").  Holds the static,
+    device-resident context — the ``ClientStore`` population, per-client
+    costs, solver template, tracker constants, the held-out test split for
+    the in-scan eval — and exposes:
 
     * ``step(carry, xs)``  — one jitted round;
     * ``scan(carry, xs)``  — R rounds under one ``lax.scan`` (xs stacked);
     * ``init_carry()`` / ``export_carry()`` — host-state ↔ carry conversion.
+
+    ``from_store`` builds an engine straight from a ``ClientStore`` +
+    ``WirelessParams`` + policy — no ``MFLExperiment`` (whose per-client
+    Python loops are prohibitive at K = 10⁵); benchmarks/population_scale.py
+    drives cohort rounds at population scale through it.
 
     ``trace_count`` increments each time the round body is *traced* — the
     zero-host-round-trips contract is asserted as "many rounds, one trace"
@@ -188,9 +257,7 @@ class FusedRoundEngine:
         self._p_tx = float(p.p_tx)
         self._N0 = float(p.N0)
 
-        feats, labels, smask = exp._get_stacked()
-        self._feats = {m: feats[m] for m in self.mods}
-        self._labels, self._smask = labels, smask
+        self._store = exp._get_store()
         self._init_params = jax.tree.map(jnp.asarray, exp.init_params)
         self._cohort = exp.adapter.cohort_step(tuple(self.mods))
 
@@ -198,16 +265,83 @@ class FusedRoundEngine:
         # for the engine's lifetime; rounds flagged by xs.eval_flag run the
         # shared fl.eval.eval_metrics program on the fresh globals
         self._test_feats, self._test_labels = device_test_set(exp.test_ds)
+        self._compile()
 
+    @classmethod
+    def from_store(cls, store, params, policy, adapter, *, V: float = 1.0,
+                   eta: float = 0.05, rho: float = 1.0,
+                   staleness: float = 0.9, init_zeta: float = 1.0,
+                   init_delta: float = 0.3, seed: int = 0):
+        """Engine straight from a ``ClientStore`` — the population-scale
+        entry point.  The solver template is assembled from the store's
+        vectorized cost/ownership arrays (the same fields
+        ``build_solver_data`` derives from ``ClientCost``/``BoundState``,
+        whose per-client Python loops this path exists to avoid); tracker
+        initials mirror ``BoundState``'s cold-start values.  Use
+        ``fresh_carry()`` for the matching initial carry."""
+        self = cls.__new__(cls)
+        self.exp = None
+        self.policy = policy
+        self.K = store.K
+        self.mods = list(store.modalities)
+        self.V = float(V)
+        self.staleness = float(staleness)
+        self.trace_count = 0
+        self._init_zeta, self._init_delta = float(init_zeta), float(init_delta)
+
+        has = np.stack([np.asarray(store.has_modality[m], bool)
+                        for m in self.mods])
+        sizes = np.asarray(store.sizes, np.float64)
+        wbar = agg.stacked_weights(sizes, {m: has[i] for i, m in
+                                           enumerate(self.mods)})
+        tmpl = {
+            "Q": np.zeros(self.K),
+            "gamma": np.asarray(store.gamma_bits, np.float64),
+            "h": np.zeros(self.K),
+            "tau_rem": params.tau_max - np.asarray(store.tau_cmp, np.float64),
+            "e_cmp": np.asarray(store.e_cmp, np.float64),
+            "B_max": float(params.B_max),
+            "p_tx": float(params.p_tx),
+            "N0": float(params.N0),
+            "V": float(V), "eta": float(eta), "rho": float(rho),
+            "zeta2": np.full(len(self.mods), init_zeta ** 2),
+            "delta2": np.full((len(self.mods), self.K), init_delta ** 2),
+            "wbar": np.stack([wbar[m] for m in self.mods]),
+            "has": has,
+            "D": sizes,
+        }
+        self._solver_tmpl = to_device(tmpl)
+        self._has = self._solver_tmpl["has"]
+        self._D = self._solver_tmpl["D"]
+        self._tau_cmp = jnp.asarray(store.tau_cmp, jnp.float32)
+        self._e_cmp = jnp.asarray(store.e_cmp, jnp.float32)
+        self._tau_max = float(params.tau_max)
+        self._E_add = float(params.E_add)
+        self._p_tx = float(params.p_tx)
+        self._N0 = float(params.N0)
+
+        self._store = jax.tree.map(jnp.asarray, store)
+        gp = adapter.init_global(jax.random.key(seed))
+        self._global_params0 = gp
+        self._init_params = jax.tree.map(jnp.asarray, gp)
+        self._cohort = adapter.cohort_step(tuple(self.mods))
+        # eval context: client 0's shard stands in as the held-out split —
+        # population benches never flag an eval round, but lax.cond still
+        # traces both branches, so the program needs *some* test tensors
+        self._test_feats = {m: self._store.features[m][0] for m in self.mods}
+        self._test_labels = self._store.labels[0]
+        self._compile()
+        return self
+
+    def _compile(self):
         # drop-mask row -> engine modality index, for policies with dropout
         # (step_full's mask rows follow policy.drop_mods; empty otherwise)
         self._drop_rows = {m: i for i, m in
                            enumerate(getattr(self.policy, "drop_mods", ()))}
-
         self._jit_step = jax.jit(self._round_step)
         self._jit_scan = jax.jit(self._scan_steps)
         self._jit_vsweep = jax.jit(jax.vmap(self._scan_one_v,
-                                            in_axes=(0, None, None)))
+                                            in_axes=(0, None, None, None)))
         self._sharded_vsweep_cache = {}     # mesh -> jitted shard_map sweep
 
     # ------------------------------------------------------------------
@@ -224,6 +358,21 @@ class FusedRoundEngine:
             zeta=f32([exp.bound.zeta[m] for m in self.mods]),
             delta=f32(np.stack([exp.bound.delta[m] for m in self.mods])),
             model_dist=f32(exp.model_dist))
+
+    def fresh_carry(self) -> FusedCarry:
+        """Cold-start carry for a ``from_store`` engine (no host experiment
+        to mirror): fresh globals, empty queues, ``BoundState``-style tracker
+        initials."""
+        M = len(self.mods)
+        f32 = lambda x: jnp.asarray(x, jnp.float32)     # noqa: E731
+        return FusedCarry(
+            params=jax.tree.map(jnp.asarray, self._global_params0),
+            policy={k: jnp.asarray(v)
+                    for k, v in self.policy.init_state().items()},
+            Q=f32(np.zeros(self.K)), spent=f32(np.zeros(self.K)),
+            zeta=f32(np.full(M, self._init_zeta)),
+            delta=f32(np.full((M, self.K), self._init_delta)),
+            model_dist=f32(np.zeros(self.K)))
 
     def export_carry(self, carry: FusedCarry) -> None:
         """Write the carry back into the host-side mirrors (checkpointing,
@@ -243,8 +392,19 @@ class FusedRoundEngine:
     # ------------------------------------------------------------------
     # the fused program
     # ------------------------------------------------------------------
-    def _round_step(self, carry: FusedCarry, xs: RoundXs, overrides=None):
+    def _round_step(self, carry: FusedCarry, xs: RoundXs, store,
+                    overrides=None, axis_name: Optional[str] = None):
+        """One round.  ``store`` is the (possibly shard-local)
+        ``ClientStore``; ``axis_name`` names the mesh axis the store and the
+        per-client xs leaves are sharded over (None = single device /
+        replicated).  Cohort compute is replicated across the client axis —
+        only the O(K·N·d) store and the O(R·K) randomness shard."""
         self.trace_count += 1
+
+        # 0. under a client-sharded mesh the *vector* physics stays dense +
+        # replicated: reassemble the full channel draw from the shards
+        h = xs.h if axis_name is None else \
+            lax.all_gather(xs.h, axis_name, tiled=True)
 
         # 1. server decision: the scheduler's traced policy core (JCSBA's
         # population-batched solve, or a baseline's traced schedule) — the
@@ -252,60 +412,81 @@ class FusedRoundEngine:
         data = dict(self._solver_tmpl)
         if overrides:
             data.update(overrides)      # e.g. a vmapped V for scenario sweeps
-        data["Q"], data["h"] = carry.Q, xs.h
+        data["Q"], data["h"] = carry.Q, h
         data["zeta2"] = jnp.square(carry.zeta)
         data["delta2"] = jnp.square(carry.delta)
-        pstate, a, B, J, drop_rows = self.policy.step_full(
+        if axis_name is not None and hasattr(self.policy, "hp"):
+            # the KKT B_min bisection is the solver's only per-client
+            # *compute* (30 fixed iterations × K): run it shard-locally on
+            # this shard's slice and all_gather — elementwise, so bit-exact
+            K_loc = xs.h.shape[0]
+            off = lax.axis_index(axis_name) * K_loc
+            sl = lambda x: lax.dynamic_slice_in_dim(x, off, K_loc)  # noqa: E731
+            bl, okl = _bmin(sl(data["gamma"]), xs.h, sl(data["tau_rem"]),
+                            data["B_max"], data["p_tx"], data["N0"],
+                            self.policy.hp)
+            data["bmin"] = lax.all_gather(bl, axis_name, tiled=True)
+            data["bmin_ok"] = lax.all_gather(okl, axis_name, tiled=True)
+        pstate, a, B, J, drop_rows, idx = self.policy.step_full(
             carry.policy, data, carry.model_dist,
             jax.random.PRNGKey(xs.draw_seed))
 
         # 2. latency feasibility (C4): scheduled-but-late ⇒ failure — energy
         # is spent, nothing is uploaded
-        r = rate(jnp.maximum(B, B_LO), xs.h, self._p_tx, self._N0)
+        r = rate(jnp.maximum(B, B_LO), h, self._p_tx, self._N0)
         tcom = jnp.where(a, data["gamma"] / jnp.maximum(r, 1e-30), 0.0)
         ok = a & (tcom + self._tau_cmp <= self._tau_max + 1e-12)
 
-        # 3. masked whole-cohort BGD updates (Eq. 7) — the upload mask is
-        # participation ∧ ownership ∧ ¬dropped (the drop mask is all-False
-        # except under the dropout baseline, whose step_full emits per-round
-        # per-modality drop bits).  An empty round skips the BGD entirely
-        # (lax.cond), mirroring the host loop's early return: with every
-        # client masked the cohort's outputs are exactly the broadcast
-        # globals + zero gradients anyway, so the skip branch is
-        # bit-identical and costs only the solver.
+        # 3. cohort gather + masked BGD updates (Eq. 7) on the [J] stack.
+        # The policy's index vector lists scheduled clients first (ascending)
+        # with unscheduled padding; ``ok_c`` masks failures and padding alike,
+        # so a padding slot contributes exact zeros everywhere downstream.
+        if axis_name is None:
+            cohort = store.take(idx)
+            seeds_c = jnp.take(xs.client_seeds, idx)
+        else:
+            cohort = jax.tree.map(
+                lambda x: _gather_rows(x, idx, axis_name), store)
+            seeds_c = _gather_rows(xs.client_seeds, idx, axis_name)
+        Jc = idx.shape[0]
+        ok_c = jnp.take(ok, idx)
         drop = {m: drop_rows[i] for m, i in self._drop_rows.items()
                 if m in self.mods}       # empty for policies without dropout
-        upload = agg.upload_masks_traced(
-            ok, {m: self._has[i] for i, m in enumerate(self.mods)}, drop)
-        avail = {m: upload[m].astype(jnp.float32) for m in self.mods}
+        drop_c = {m: jnp.take(d, idx) for m, d in drop.items()}
+        upload_c = agg.upload_masks_traced(ok_c, cohort.has_modality, drop_c)
+        avail_c = {m: upload_c[m].astype(jnp.float32) for m in self.mods}
 
         def run_cohort(args):
             params, avail, seeds = args
             newp, grads, _totals, dist_sq = self._cohort(
-                params, self._init_params, self._feats, self._labels,
-                self._smask, avail, seeds)
+                params, self._init_params, cohort.features, cohort.labels,
+                cohort.sample_mask, avail, seeds)
             return newp, grads, dist_sq
 
         def skip_cohort(args):
             params, _avail, _seeds = args
             newp = jax.tree.map(
-                lambda p: jnp.broadcast_to(p, (self.K,) + p.shape), params)
+                lambda p: jnp.broadcast_to(p, (Jc,) + p.shape), params)
             return (newp, jax.tree.map(jnp.zeros_like, newp),
-                    {m: jnp.zeros(self.K, jnp.float32) for m in self.mods})
+                    {m: jnp.zeros(Jc, jnp.float32) for m in self.mods})
 
-        newp, grads, dist_sq = lax.cond(
+        newp_c, grads_c, dist_sq_c = lax.cond(
             ok.any(), run_cohort, skip_cohort,
-            (carry.params, avail, xs.client_seeds))
+            (carry.params, avail_c, seeds_c))
 
-        # 4. Eq. 12 aggregation + ζ/δ tracker refresh
-        w = agg.stacked_weights_traced(self._D, upload)
-        new_params = agg.aggregate_stacked_traced(carry.params, newp, w)
-        agg_grads = agg.aggregate_gradients_stacked_traced(grads, w)
+        # 4. Eq. 12 aggregation on the cohort stack + ζ/δ tracker refresh.
+        # Every contributor is in the cohort by construction, so the weight
+        # renormalisation over J equals the dense one over K; the dense [K]
+        # weight rows the aux records keep are the segment-sum scatter.
+        w_c = agg.stacked_weights_traced(cohort.sizes, upload_c)
+        new_params = agg.aggregate_stacked_traced(carry.params, newp_c, w_c)
+        agg_grads = agg.aggregate_gradients_stacked_traced(grads_c, w_c)
+        w = agg.cohort_weights_dense(w_c, idx, self.K)
         zs, ds = [], []
         for i, m in enumerate(self.mods):
-            z_m, d_m = tracker_update_masked(
-                carry.zeta[i], carry.delta[i], grads[m], agg_grads[m],
-                upload[m], self._has[i], self.staleness)
+            z_m, d_m = tracker_update_cohort(
+                carry.zeta[i], carry.delta[i], grads_c[m], agg_grads[m],
+                upload_c[m], idx, self._has[i], self.staleness)
             zs.append(z_m)
             ds.append(d_m)
 
@@ -314,9 +495,12 @@ class FusedRoundEngine:
         Qn = queue_update(carry.Q, used, self._E_add)
         spent = carry.spent + used
 
-        # 6. ‖θ_k − θ⁰‖ for participants (Selection-scheduler bookkeeping)
-        d_sq = sum(dist_sq[m] * avail[m] for m in self.mods)
-        model_dist = jnp.where(ok, jnp.sqrt(d_sq), carry.model_dist)
+        # 6. ‖θ_k − θ⁰‖ for participants (Selection-scheduler bookkeeping):
+        # cohort-local distances scattered back to the dense row
+        d_sq_c = sum(dist_sq_c[m] * avail_c[m] for m in self.mods)
+        dist_k = agg.scatter_cohort_rows(
+            jnp.where(ok_c, jnp.sqrt(d_sq_c), 0.0), idx, self.K)
+        model_dist = jnp.where(ok, dist_k, carry.model_dist)
 
         # 7. device-resident eval of the fresh globals on the held-out split
         # (the host loop's adapter.evaluate, fused behind the cadence flag —
@@ -332,21 +516,25 @@ class FusedRoundEngine:
         aux = RoundAux(a, ok, J, w, spent.sum(), drop, metrics, xs.eval_flag)
         return new_carry, aux
 
-    def _scan_steps(self, carry: FusedCarry, xs: RoundXs):
-        return lax.scan(self._round_step, carry, xs)
+    def _scan_steps(self, carry: FusedCarry, xs: RoundXs, store):
+        def body(c, x):
+            return self._round_step(c, x, store)
+        return lax.scan(body, carry, xs)
 
     # ------------------------------------------------------------------
     def step(self, carry: FusedCarry, xs: RoundXs):
-        return self._jit_step(carry, xs)
+        return self._jit_step(carry, xs, self._store)
 
     def scan(self, carry: FusedCarry, xs: RoundXs):
         """R rounds in one program; xs leaves carry a leading [R] axis.
         Compiles once per distinct R (then cached)."""
-        return self._jit_scan(carry, xs)
+        return self._jit_scan(carry, xs, self._store)
 
-    def _scan_one_v(self, V, carry: FusedCarry, xs: RoundXs):
+    def _scan_one_v(self, V, carry: FusedCarry, xs: RoundXs, store,
+                    axis_name: Optional[str] = None):
         def body(c, x):
-            return self._round_step(c, x, overrides={"V": V})
+            return self._round_step(c, x, store, overrides={"V": V},
+                                    axis_name=axis_name)
         return lax.scan(body, carry, xs)
 
     def scan_v_grid(self, V_grid, carry: FusedCarry, xs: RoundXs,
@@ -358,29 +546,59 @@ class FusedRoundEngine:
         leading [len(V_grid)] axis.  This is the dense V-frontier workload
         the split pipeline cannot express without n_V × R host round-trips.
 
-        The scenario axis is sharded across a device mesh when one is
-        available: ``mesh="auto"`` builds a 1-D ``("scenario",)`` mesh over
-        all local devices (``launch.mesh.make_sweep_mesh``; virtual CPU
-        devices included), ``mesh=None`` forces the single-device vmap, or
-        pass an explicit mesh.  Scenarios are independent, so sharding is
-        pure SPMD fan-out via ``shard_map`` (``launch.sharding``) — grids
-        that don't divide the device count are padded by repeating the last
-        V and sliced back.  Sharded and single-device runs produce the same
-        results (tests/test_sharded_sweep.py)."""
+        Meshes: ``mesh="auto"`` builds a 1-D ``("scenario",)`` mesh over all
+        local devices (``launch.mesh.make_sweep_mesh``), ``mesh=None`` forces
+        the single-device vmap, or pass an explicit mesh.  A 1-D mesh shards
+        the scenario axis only — pure SPMD fan-out (``scenario_shard_map``).
+        A 2-D ``("scenario", "clients")`` mesh
+        (``launch.mesh.make_population_mesh``) additionally partitions the
+        client store and the per-client randomness over the ``"clients"``
+        axis (specs from ``launch.sharding.logical_pspec``): each shard holds
+        K/n_clients rows of every O(K·N·d) leaf, the round body gathers
+        cohorts via masked psums and keeps cohort compute replicated.  Grids
+        that don't divide the scenario axis are padded by repeating the last
+        V and sliced back; K must divide the clients axis.  Sharded and
+        single-device runs produce the same results
+        (tests/test_sharded_sweep.py, tests/test_cohort_gather.py)."""
         V = jnp.asarray(V_grid, jnp.float32)
         if mesh == "auto":
             mesh = make_sweep_mesh()
         if mesh is None or mesh.devices.size <= 1:
-            return self._jit_vsweep(V, carry, xs)
+            return self._jit_vsweep(V, carry, xs, self._store)
         n_V = V.shape[0]
-        Vp = pad_leading_axis(V, mesh.devices.size)
-        fn = self._sharded_vsweep_cache.get(mesh)
-        if fn is None:
-            vm = jax.vmap(self._scan_one_v, in_axes=(0, None, None))
-            fn = jax.jit(scenario_shard_map(vm, mesh, n_args=3,
-                                            sharded_args=(0,)))
-            self._sharded_vsweep_cache[mesh] = fn
-        carries, auxs = fn(Vp, carry, xs)
+        if "clients" in mesh.axis_names:
+            n_cl = int(mesh.shape["clients"])
+            if self.K % n_cl:
+                raise ValueError(
+                    f"K={self.K} must divide the mesh's clients axis "
+                    f"({n_cl} shards)")
+            Vp = pad_leading_axis(V, int(mesh.shape["scenario"]))
+            fn = self._sharded_vsweep_cache.get(mesh)
+            if fn is None:
+                vm = jax.vmap(
+                    functools.partial(self._scan_one_v, axis_name="clients"),
+                    in_axes=(0, None, None, None))
+                xs_spec = RoundXs(
+                    h=logical_pspec(("rounds", "clients"), mesh),
+                    draw_seed=logical_pspec(("rounds",), mesh),
+                    client_seeds=logical_pspec(("rounds", "clients"), mesh),
+                    eval_flag=logical_pspec(("rounds",), mesh))
+                fn = jax.jit(population_shard_map(
+                    vm, mesh,
+                    in_specs=(logical_pspec(("scenario",), mesh), P(),
+                              xs_spec, logical_pspec(("clients",), mesh)),
+                    out_specs=logical_pspec(("scenario",), mesh)))
+                self._sharded_vsweep_cache[mesh] = fn
+            carries, auxs = fn(Vp, carry, xs, self._store)
+        else:
+            Vp = pad_leading_axis(V, mesh.devices.size)
+            fn = self._sharded_vsweep_cache.get(mesh)
+            if fn is None:
+                vm = jax.vmap(self._scan_one_v, in_axes=(0, None, None, None))
+                fn = jax.jit(scenario_shard_map(vm, mesh, n_args=4,
+                                                sharded_args=(0,)))
+                self._sharded_vsweep_cache[mesh] = fn
+            carries, auxs = fn(Vp, carry, xs, self._store)
         return (slice_leading_axis(carries, n_V),
                 slice_leading_axis(auxs, n_V))
 

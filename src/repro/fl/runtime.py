@@ -5,8 +5,9 @@ Per communication round t:
   2. the server solves the scheduling/bandwidth problem (JCSBA or a baseline).
      JCSBA runs on the population-batched solver (``wireless.solver``) — one
      fused jitted program per round evaluating the whole immune population;
-     ``solver="np"`` selects its float64 numpy mirror and ``solver="seq"``
-     the original sequential scalar path (see ``schedulers.JCSBAScheduler``);
+     the engine spec's backend suffix (``engine="batched:np"`` /
+     ``"seq:seq"``) selects its float64 numpy mirror or the original
+     sequential scalar path (see ``schedulers.JCSBAScheduler``);
   3. scheduled clients run the local update (one BGD epoch, Eq. 7) — clients
      whose latency constraint is violated under the chosen bandwidth are
      *transmission failures*: they consume energy but contribute no update
@@ -15,8 +16,16 @@ Per communication round t:
   5. Lyapunov queues and the Theorem-1 ζ/δ trackers are updated;
   6. test metrics (multimodal + per-modality accuracy) are recorded.
 
-Batched round engine (default, ``batched=True``)
-------------------------------------------------
+Round engines (``engine=`` — "seq" | "batched" | "fused")
+---------------------------------------------------------
+One kwarg selects how rounds execute; a ``":<backend>"`` suffix picks the
+JCSBA solver backend for parity studies (``"batched:np"`` — float64 numpy
+mirror, ``"seq:seq"`` — the original scalar path; default jax).  The legacy
+``batched=`` / ``solver=`` / ``fused=`` trio maps onto the same spec and
+now emits a DeprecationWarning.
+
+Batched round engine (default, ``engine="batched"``)
+----------------------------------------------------
 Step 3 historically re-entered JAX once per scheduled client.  The batched
 engine instead executes *all* K clients' one-epoch BGD updates as a single
 jitted ``jax.vmap`` over a dense, device-resident client stack, making the
@@ -38,12 +47,12 @@ round — not the client — the unit of compute:
 * **Equivalence.** With the same seed and schedule, the batched and
   sequential paths produce identical Eq. 12 weights and globally aggregated
   params up to float32 reduction order (tests/test_batched_equivalence.py).
-  The sequential loop is kept behind ``batched=False`` for exactly this A/B.
+  The sequential loop is kept behind ``engine="seq"`` for exactly this A/B.
 
-Fused round engine (``fused=True``)
------------------------------------
+Fused round engine (``engine="fused"``)
+---------------------------------------
 The batched engine still hops to host between the jitted solver and the
-jitted client stage every round.  ``fused=True`` runs the *whole* round —
+jitted client stage every round.  ``engine="fused"`` runs the *whole* round —
 steps 1-6 above, test metrics included via the device-resident ``fl.eval``
 pass — as one jitted program (fl/fused_round.py) for every scheduler with a
 traced policy core (jcsba / random / round_robin / selection / dropout —
@@ -61,6 +70,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Dict, List, Optional
 
 import jax
@@ -122,23 +132,61 @@ class RoundRecord:
                     for m, ks in (dropped or {}).items()})
 
 
+#: valid ``engine=`` loop names, in increasing fusion order
+ENGINE_LOOPS = ("seq", "batched", "fused")
+
+
+def _resolve_engine(engine: str, batched, solver, fused) -> str:
+    """Collapse the legacy ``batched=``/``solver=``/``fused=`` trio into the
+    unified ``engine="<loop>[:<backend>]"`` spec (with a DeprecationWarning
+    when any legacy kwarg is passed)."""
+    legacy = {k: v for k, v in
+              (("batched", batched), ("solver", solver), ("fused", fused))
+              if v is not None}
+    if legacy:
+        warnings.warn(
+            f"MFLExperiment({', '.join(k + '=' for k in legacy)}...) is "
+            f"deprecated; use the unified engine= spec — "
+            f"'seq' | 'batched' | 'fused', with an optional "
+            f"':<jcsba backend>' suffix (e.g. 'batched:np')",
+            DeprecationWarning, stacklevel=3)
+        loop = ("fused" if legacy.get("fused") else
+                "seq" if batched is False else "batched")
+        backend = legacy.get("solver", "jax")
+        return f"{loop}:{backend}" if backend != "jax" else loop
+    return engine
+
+
 class MFLExperiment:
     def __init__(self, dataset: str = "crema_d", scheduler: str = "jcsba",
                  K: int = 10, omega: float = 0.3, n_samples: int = 1200,
                  eta: float = 0.05, V: float = 1.0, seed: int = 0,
                  params: Optional[WirelessParams] = None,
                  scheduler_kwargs: Optional[dict] = None,
-                 eval_every: int = 1, batched: bool = True,
-                 solver: str = "jax", fused: bool = False):
+                 eval_every: int = 1, engine: str = "batched",
+                 batched: Optional[bool] = None,
+                 solver: Optional[str] = None,
+                 fused: Optional[bool] = None):
+        engine = _resolve_engine(engine, batched, solver, fused)
+        loop, _, backend = engine.partition(":")
+        backend = backend or "jax"
+        if loop not in ENGINE_LOOPS:
+            raise ValueError(
+                f"unknown engine {engine!r}; expected "
+                f"'seq' | 'batched' | 'fused' with an optional "
+                f"':<jcsba backend>' suffix")
+        self.engine = f"{loop}:{backend}"
         self.rng = np.random.default_rng(seed)
         self.params = params or WirelessParams(K=K)
         self.eval_every = eval_every
-        self.batched = batched
-        self.fused = fused
+        self.batched = loop == "batched"
+        self.fused = loop == "fused"
         self._fused_engine = None           # built lazily (fl/fused_round.py)
         self._carry = None                  # FusedCarry when fused
         self._stacked_dev = None            # device-resident client stack
         self._stacked_src = None            # cohort it was built from
+        self._store_dev = None              # device-resident ClientStore
+        self._store_src = None              # cohort it was built from
 
         full = synthetic.DATASETS[dataset](seed=seed, n=n_samples)
         self.train_ds, self.test_ds = train_test_split(full, 0.2, seed)
@@ -164,13 +212,13 @@ class MFLExperiment:
         kw = dict(scheduler_kwargs or {})
         if scheduler == "jcsba":
             kw.setdefault("V", V)
-            kw.setdefault("solver", solver)
+            kw.setdefault("solver", backend)
         self.scheduler: Scheduler = make_scheduler(scheduler, self.rng, **kw)
         self.scheduler.bind(K, self.client_mods)
-        if fused and self.scheduler.policy is None:
+        if self.fused and self.scheduler.policy is None:
             raise ValueError(
-                f"fused=True requires a traced scheduling policy; "
-                f"scheduler={scheduler!r} with solver={solver!r} runs "
+                f"engine='fused' requires a traced scheduling policy; "
+                f"scheduler={scheduler!r} with backend={backend!r} runs "
                 f"host-side only (every scheduler has a traced core — "
                 f"jcsba/random/round_robin/selection/dropout — except "
                 f"JCSBA's np/seq parity backends)")
@@ -286,7 +334,7 @@ class MFLExperiment:
         of the whole fused scan (compile included on the first call), not the
         host path's scheduler-only time."""
         if not self.fused:
-            raise RuntimeError("run_scanned requires fused=True")
+            raise RuntimeError("run_scanned requires engine='fused'")
         from .fused_round import draw_round_xs
         eng = self._get_fused_engine()
         xs = draw_round_xs(self, rounds)
@@ -396,6 +444,21 @@ class MFLExperiment:
             self._stacked_src = src
         return self._stacked_dev
 
+    def _get_store(self):
+        """Device-resident ``ClientStore`` (the fused engine's population
+        store; data/partition.py) — same cohort-identity invalidation
+        contract as ``_get_stacked``."""
+        src = tuple(map(id, self.clients))
+        if self._store_dev is None or self._store_src != src:
+            import jax.numpy as jnp
+            from ..data.partition import build_client_store, stack_clients
+            sc = stack_clients(self.clients, self.all_mods)
+            store = build_client_store(sc, self.cost.gamma_bits,
+                                       self.cost.tau_cmp, self.cost.e_cmp)
+            self._store_dev = jax.tree.map(jnp.asarray, store)
+            self._store_src = src
+        return self._store_dev
+
     def run(self, rounds: int, verbose: bool = False) -> List[RoundRecord]:
         for _ in range(rounds):
             rec = self.run_round()
@@ -446,9 +509,17 @@ class MFLExperiment:
         self.model_dist = np.asarray(state["model_dist"])
         # policy state via the explicit API; stateless policies saved nothing
         # (the empty dict flattens away).  Pre-policy checkpoints stored the
-        # JCSBA warm start as a top-level "warm_a" — still accepted.
+        # JCSBA warm start as a top-level "warm_a" blob — still restored, but
+        # deprecated: save() has written only the policy/ state dict since
+        # the traced-policy layer landed, so re-saving migrates in place.
         pol = state.get("policy")
         if pol is None and "warm_a" in state:
+            warnings.warn(
+                "checkpoint uses the legacy top-level 'warm_a' warm-start "
+                "blob; restored this time — re-save the experiment to "
+                "migrate to the policy/ state-dict format (see README "
+                "'Checkpoint migration')",
+                DeprecationWarning, stacklevel=2)
             pol = {"warm_a": state["warm_a"]}
         if pol:
             self.scheduler.load_state(pol)

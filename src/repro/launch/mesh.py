@@ -43,6 +43,41 @@ def make_sweep_mesh(n_devices: int | None = None):
     return Mesh(np.asarray(devs[:n]), ("scenario",))
 
 
+def make_population_mesh(n_scenario: int | None = None,
+                         n_clients: int | None = None):
+    """2-D ``("scenario", "clients")`` mesh for population-scale sweeps: the
+    scenario axis fans out independent experiments (as in ``make_sweep_mesh``)
+    while the clients axis partitions the device-resident client store and
+    the per-client randomness, so O(K·N·d) population data scales across
+    devices (``launch.sharding.logical_pspec`` + the cohort gather in
+    fl/fused_round.py).
+
+    Factor the local device count explicitly (``n_scenario × n_clients``) or
+    leave one side None to infer it; with both None all devices go to the
+    clients axis (scenario=1).  Returns ``None`` on a single device, like
+    ``make_sweep_mesh`` — callers fall back to the unsharded vmap."""
+    import numpy as np
+    from jax.sharding import Mesh
+
+    devs = jax.devices()
+    total = len(devs)
+    if total <= 1:
+        return None
+    if n_scenario is None and n_clients is None:
+        n_scenario, n_clients = 1, total
+    elif n_clients is None:
+        n_clients = total // n_scenario
+    elif n_scenario is None:
+        n_scenario = total // n_clients
+    n = n_scenario * n_clients
+    if n_scenario < 1 or n_clients < 1 or n > total:
+        raise ValueError(
+            f"mesh {n_scenario}x{n_clients} needs {n} devices, "
+            f"have {total}")
+    return Mesh(np.asarray(devs[:n]).reshape(n_scenario, n_clients),
+                ("scenario", "clients"))
+
+
 def data_axes(mesh) -> tuple:
     """Axes the global batch is sharded over."""
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

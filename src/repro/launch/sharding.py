@@ -141,6 +141,54 @@ def scenario_shard_map(fn, mesh: Mesh, n_args: int,
                      out_specs=P("scenario"), check_rep=False)
 
 
+# ---------------------------------------------------------------------------
+# population sweeps: logical axis rules for the 2-D ("scenario", "clients")
+# mesh.  MaxText-style indirection — callers name the LOGICAL axes of each
+# tensor ("which axis is the client axis?") and the rules table maps them to
+# mesh axes, so the round program never hard-codes a mesh layout and a rule
+# absent from the mesh degrades to replication.
+# ---------------------------------------------------------------------------
+SWEEP_AXIS_RULES: Sequence[Tuple[str, Optional[str]]] = (
+    ("scenario", "scenario"),   # grid rows — independent whole experiments
+    ("clients", "clients"),     # population axis of the client store / xs
+    ("rounds", None),           # the lax.scan axis — never sharded
+    ("batch", None),            # per-client samples — never sharded
+)
+
+
+def logical_pspec(axes: Sequence[Optional[str]], mesh: Optional[Mesh] = None,
+                  rules=SWEEP_AXIS_RULES) -> P:
+    """PartitionSpec for a tensor whose dims carry the given logical axis
+    names (None = unnamed/replicated dim).  Names missing from the rules
+    table, mapped to None, or mapped to an axis the ``mesh`` doesn't carry
+    all resolve to replication — the same program runs on a 1-D
+    ``("scenario",)`` mesh with the client axis silently unsharded."""
+    table = dict(rules)
+    dims = []
+    for ax in axes:
+        mesh_ax = table.get(ax) if ax is not None else None
+        if (mesh is not None and mesh_ax is not None
+                and mesh_ax not in mesh.axis_names):
+            mesh_ax = None
+        dims.append(mesh_ax)
+    return P(*dims)
+
+
+def population_shard_map(fn, mesh: Mesh, in_specs, out_specs):
+    """``shard_map`` over the 2-D ``("scenario", "clients")`` mesh with
+    explicit per-argument (pytree) specs — unlike ``scenario_shard_map``'s
+    uniform leading-axis split, population sweeps shard different arguments
+    along different axes: the V grid over "scenario", the client store and
+    per-client randomness over "clients", the carry replicated.
+    check_rep=False for the same scan-carry reason as ``scenario_shard_map``;
+    the only collectives are the cohort gather's psums / all_gathers over
+    "clients", whose outputs are replicated by construction."""
+    from jax.experimental.shard_map import shard_map
+
+    return shard_map(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=False)
+
+
 def pad_leading_axis(tree, multiple: int):
     """Pad every leaf's leading axis to a multiple of ``multiple`` by
     repeating the last scenario (duplicate work, dropped by

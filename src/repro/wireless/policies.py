@@ -26,10 +26,16 @@ per round for every policy — the static rng discipline PR 3 established for
 JCSBA), so fused xs pregeneration stays draw-for-draw identical to the host
 loop for all policies.
 
-Policies whose decision includes *modality dropout* ([28]'s baseline) emit a
-per-modality drop mask as a fifth output of ``step_full`` — see
-:class:`DropoutPolicy`.  Policies without dropout inherit the default
-zero-row mask, so the fused engine consumes one uniform decision shape.
+The canonical decision surface is ``step_full(state, data, model_dist, key)
+-> (state, a, B, J, drop, cohort_idx)``: the dense schedule ``a``, bandwidth
+``B`` and bound value ``J``, plus a per-modality drop mask (zero rows for
+policies without dropout — see :class:`DropoutPolicy`) and a **static-size
+cohort index vector** ``cohort_idx [cohort_size] int32`` listing the
+scheduled clients' indices (ascending, padded with unscheduled indices —
+consumers neutralize padding via ``a[cohort_idx]``).  The cohort vector is
+what makes the fused round's BGD/aggregation hot path O(J) instead of O(K):
+the engine gathers only ``cohort_idx`` rows from the client store.  ``step``
+remains as a thin 4-tuple compat adapter.
 """
 from __future__ import annotations
 
@@ -40,11 +46,36 @@ from typing import Dict, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
 
 from .solver import SolverHyper
 from .solver.jaxsolver import solve_core
 
 POLICY_NAMES = ("jcsba", "random", "round_robin", "selection", "dropout")
+
+
+def cohort_indices(a, cohort_size: int):
+    """Static-size cohort index vector from a dense schedule mask.
+
+    Semantics are those of the stable-sort spec ``jnp.argsort(~a)
+    [:cohort_size]``: scheduled clients first *in ascending index order*,
+    then unscheduled padding (also ascending).  The leading ``cohort_size``
+    entries are therefore every scheduled client (provided the policy's
+    ``cohort_size`` upper-bounds its schedule width) plus padding slots that
+    point at unscheduled clients — downstream masks (``a[cohort_idx]``, the
+    Eq. 12 upload masks) neutralize the padding, so duplicate-free indices
+    are guaranteed by construction.
+
+    Implemented as ``lax.top_k`` over the key ``(a ? 3K : K) - k`` — every
+    scheduled key outranks every unscheduled one and both groups descend
+    with the client index, so the result is *bit-identical* to the argsort
+    spec (property-locked in tests/test_cohort_gather.py) at O(K log J)
+    instead of the full sort's O(K log K): at K=100k the full sort alone
+    costs more than the entire cohort round."""
+    a = jnp.asarray(a, bool)
+    K = a.shape[0]
+    key = jnp.where(a, 3 * K, K) - jnp.arange(K)
+    return lax.top_k(key, cohort_size)[1].astype(jnp.int32)
 
 
 def equal_bandwidth_traced(a, B_max):
@@ -70,20 +101,37 @@ class SchedulePolicy:
     #: policies without dropout)
     drop_mods: Tuple[str, ...] = ()
 
+    @property
+    def cohort_size(self) -> int:
+        """Static upper bound on how many clients the policy ever schedules
+        in one round — the length of ``step_full``'s cohort index vector and
+        hence the O(J) working-set size of the fused round's gather path.
+        Defaults to K (dense: always safe); bounded policies override."""
+        return self.K
+
     def init_state(self) -> Dict[str, np.ndarray]:
         return {}
 
-    def step(self, state, data, model_dist, key):
-        """-> (new_state, a [K] bool, B [K] f32, J scalar f32)."""
+    def step_full(self, state, data, model_dist, key):
+        """The canonical decision: ``-> (new_state, a [K] bool, B [K] f32,
+        J scalar f32, drop [M_drop, K] bool, cohort_idx [cohort_size] int32)``
+        with drop rows in ``self.drop_mods`` order (zero rows for policies
+        without dropout, so consumers branch on the *static* row count at
+        trace time) and the cohort vector from :func:`cohort_indices`."""
         raise NotImplementedError
 
-    def step_full(self, state, data, model_dist, key):
-        """-> (new_state, a, B, J, drop [M_drop, K] bool) — the full decision
-        including per-modality drop masks in ``self.drop_mods`` row order.
-        Policies without dropout emit the zero-row mask (M_drop = 0), so the
-        consumer can branch on the *static* row count at trace time."""
-        new_state, a, B, J = self.step(state, data, model_dist, key)
-        return new_state, a, B, J, jnp.zeros((0, a.shape[0]), bool)
+    def step(self, state, data, model_dist, key):
+        """Thin compat adapter: the classic 4-tuple projection of
+        ``step_full`` — ``(new_state, a, B, J)``."""
+        return self.step_full(state, data, model_dist, key)[:4]
+
+    def _finish(self, state, a, B, J, drop=None):
+        """Assemble the canonical 6-tuple from a policy's core decision:
+        appends the zero-row drop mask when the policy has none, and the
+        static-size cohort index vector."""
+        if drop is None:
+            drop = jnp.zeros((0, a.shape[0]), bool)
+        return state, a, B, J, drop, cohort_indices(a, self.cohort_size)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -92,19 +140,29 @@ class JCSBAPolicy(SchedulePolicy):
     P4.2' + Theorem-1 bound) via the population-batched fused solver.  State
     is the warm-start antibody: the previous round's winner is written over
     population row 0, the all-zeros antibody over row 1 (so the empty
-    schedule is always evaluated and J* is always finite)."""
+    schedule is always evaluated and J* is always finite).
+
+    ``max_cohort`` optionally caps the cohort vector's static size for
+    population-scale runs (the solver may in principle schedule anyone, so
+    the default is the always-safe dense K)."""
     K: int
     hp: SolverHyper = SolverHyper()
+    max_cohort: Optional[int] = None
     name = "jcsba"
+
+    @property
+    def cohort_size(self) -> int:
+        return self.K if self.max_cohort is None \
+            else min(self.max_cohort, self.K)
 
     def init_state(self):
         return {"warm_a": np.zeros(self.K, bool)}
 
-    def step(self, state, data, model_dist, key):
+    def step_full(self, state, data, model_dist, key):
         warm = jnp.asarray(state["warm_a"], bool)
         seeds = jnp.stack([warm, jnp.zeros_like(warm)])
         a, J, B = solve_core(data, seeds, key, self.hp)
-        return {"warm_a": a}, a, B, J
+        return self._finish({"warm_a": a}, a, B, J)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -114,12 +172,22 @@ class RandomPolicy(SchedulePolicy):
     n_sched: int = 4
     name = "random"
 
-    def step(self, state, data, model_dist, key):
+    @property
+    def cohort_size(self) -> int:
+        return min(self.n_sched, self.K)
+
+    def step_full(self, state, data, model_dist, key):
+        # uniform n-subset via Gumbel/uniform top-k: every fixed-size subset
+        # is equally likely (symmetry of iid uniforms), same distribution as
+        # taking a full permutation's head — but O(K log n), which matters
+        # at population scale (jax.random.permutation costs ~66 ms at
+        # K=100k on CPU, dominating the whole cohort round)
         n = min(self.n_sched, self.K)
-        perm = jax.random.permutation(key, self.K)
-        a = jnp.zeros(self.K, bool).at[perm[:n]].set(True)
-        return state, a, equal_bandwidth_traced(a, data["B_max"]), \
-            jnp.float32(jnp.nan)
+        u = jax.random.uniform(key, (self.K,))
+        a = jnp.zeros(self.K, bool).at[lax.top_k(u, n)[1]].set(True)
+        return self._finish(state, a,
+                            equal_bandwidth_traced(a, data["B_max"]),
+                            jnp.float32(jnp.nan))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -130,16 +198,21 @@ class RoundRobinPolicy(SchedulePolicy):
     n_sched: int = 4
     name = "round_robin"
 
+    @property
+    def cohort_size(self) -> int:
+        return min(self.n_sched, self.K)
+
     def init_state(self):
         return {"next": np.zeros((), np.int32)}
 
-    def step(self, state, data, model_dist, key):
+    def step_full(self, state, data, model_dist, key):
         n = min(self.n_sched, self.K)
         idx = (state["next"] + jnp.arange(n, dtype=jnp.int32)) % self.K
         a = jnp.zeros(self.K, bool).at[idx].set(True)
         new = {"next": (state["next"] + jnp.int32(self.n_sched)) % self.K}
-        return new, a, equal_bandwidth_traced(a, data["B_max"]), \
-            jnp.float32(jnp.nan)
+        return self._finish(new, a,
+                            equal_bandwidth_traced(a, data["B_max"]),
+                            jnp.float32(jnp.nan))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -172,7 +245,11 @@ class SelectionPolicy(SchedulePolicy):
                              for g, n in sizes.items()))
         return cls(K, tuple(gids), picks)
 
-    def step(self, state, data, model_dist, key):
+    @property
+    def cohort_size(self) -> int:
+        return min(self.K, sum(n for _, n in self.group_picks))
+
+    def step_full(self, state, data, model_dist, key):
         gid = jnp.asarray(self.group_ids, jnp.int32)
         dist = jnp.asarray(model_dist, jnp.float32)
         a = jnp.zeros(self.K, bool)
@@ -180,8 +257,9 @@ class SelectionPolicy(SchedulePolicy):
             scores = jnp.where(gid == g, dist, -jnp.inf)
             top = jnp.argsort(-scores)[:n_pick]
             a = a.at[top].set(True)
-        return state, a, equal_bandwidth_traced(a, data["B_max"]), \
-            jnp.float32(jnp.nan)
+        return self._finish(state, a,
+                            equal_bandwidth_traced(a, data["B_max"]),
+                            jnp.float32(jnp.nan))
 
 
 def dropout_draws(key, K: int):
@@ -242,17 +320,18 @@ class DropoutPolicy(SchedulePolicy):
         rank = jnp.cumsum(owns, axis=0) - owns
         return do[None] & owns & (rank == which[None])
 
-    def step(self, state, data, model_dist, key):
-        new_state, a, B, J, _ = self.step_full(state, data, model_dist, key)
-        return new_state, a, B, J
+    @property
+    def cohort_size(self) -> int:
+        return min(self.n_sched, self.K)
 
     def step_full(self, state, data, model_dist, key):
         k_sub, k_drop = jax.random.split(key)
         n = min(self.n_sched, self.K)
         perm = jax.random.permutation(k_sub, self.K)
         a = jnp.zeros(self.K, bool).at[perm[:n]].set(True)
-        return state, a, equal_bandwidth_traced(a, data["B_max"]), \
-            jnp.float32(jnp.nan), self.drop_mask(a, k_drop)
+        return self._finish(state, a,
+                            equal_bandwidth_traced(a, data["B_max"]),
+                            jnp.float32(jnp.nan), self.drop_mask(a, k_drop))
 
 
 # ---------------------------------------------------------------------------
@@ -264,8 +343,9 @@ def policy_step(policy: SchedulePolicy, state, data, model_dist, seed):
     round's ``jax.random`` key from the scalar ``seed`` (a uint32 array, NOT
     a Python int — Python ints would retrace per round) exactly like the
     fused engine does from ``xs.draw_seed``, so both paths consume identical
-    bits.  Returns the 5-tuple ``(state, a, B, J, drop)``; the drop mask has
-    zero rows for policies without dropout."""
+    bits.  Returns the canonical 6-tuple ``(state, a, B, J, drop,
+    cohort_idx)``; the drop mask has zero rows for policies without
+    dropout."""
     return policy.step_full(state, data, model_dist, jax.random.PRNGKey(seed))
 
 
@@ -274,7 +354,8 @@ def make_policy(name: str, K: int,
                 **kw) -> SchedulePolicy:
     name = name.lower()
     if name == "jcsba":
-        return JCSBAPolicy(K, SolverHyper(**kw.get("immune_kwargs", {}) or {}))
+        return JCSBAPolicy(K, SolverHyper(**kw.get("immune_kwargs", {}) or {}),
+                           kw.get("max_cohort"))
     if name == "random":
         return RandomPolicy(K, kw.get("n_sched", 4))
     if name in ("round_robin", "roundrobin"):

@@ -13,7 +13,7 @@ Every policy's decision logic lives in ``wireless.policies`` as a pure
 jittable ``SchedulePolicy.step``; the ``Scheduler`` classes here only manage
 host state (rng stream, policy state, ScheduleContext → device conversion)
 and jit the same traced core the fused round engine inlines — so the host
-loop and ``MFLExperiment(fused=True)`` agree by construction.
+loop and ``MFLExperiment(engine="fused")`` agree by construction.
 
 RNG discipline: every policy-backed scheduler — Dropout included since its
 drop draws moved into the traced ``DropoutPolicy`` core — consumes exactly
@@ -147,10 +147,10 @@ class PolicyScheduler(Scheduler):
         draw_seed = np.uint32(self.rng.integers(2 ** 31))
         dist = (np.zeros(K) if ctx.model_dist is None else ctx.model_dist)
         state = {k: jnp.asarray(v) for k, v in self._state.items()}
-        state, a, B, J, drop = policy_step(self._policy, state,
-                                           self._build_data(ctx),
-                                           jnp.asarray(dist, jnp.float32),
-                                           draw_seed)
+        state, a, B, J, drop, _ = policy_step(self._policy, state,
+                                              self._build_data(ctx),
+                                              jnp.asarray(dist, jnp.float32),
+                                              draw_seed)
         self._state = {k: np.asarray(v) for k, v in state.items()}
         # decode the traced drop mask (row order = policy.drop_mods) into the
         # per-client dropout_modality list the FL runtime consumes

@@ -213,10 +213,19 @@ def solve_core(data: dict, seeds, key, hp: SolverHyper):
 
     ``seeds`` [2, K] bool: warm-start antibody rows written over the first
     population rows (row 1 is conventionally the all-zeros antibody, so an
-    empty schedule is always evaluated and J* is always finite)."""
+    empty schedule is always evaluated and J* is always finite).
+
+    Callers may inject a precomputed per-client bisection as ``data["bmin"]``
+    / ``data["bmin_ok"]`` — the fused round engine computes ``_bmin`` shard-
+    locally under a client-sharded mesh and ``all_gather``s the [K] result
+    (the bisection is elementwise, so the injected values are bit-identical
+    to the inline ones)."""
     K = data["Q"].shape[0]
-    bmin, ok = _bmin(data["gamma"], data["h"], data["tau_rem"],
-                     data["B_max"], data["p_tx"], data["N0"], hp)
+    if "bmin" in data:
+        bmin, ok = data["bmin"], data["bmin_ok"]
+    else:
+        bmin, ok = _bmin(data["gamma"], data["h"], data["tau_rem"],
+                         data["B_max"], data["p_tx"], data["N0"], hp)
 
     def J_batch(A):
         B, feas = allocate_batch(A, bmin, ok, data["Q"], data["gamma"],

@@ -20,10 +20,10 @@ from repro.fl.runtime import MFLExperiment
 def _twin_run(dataset, scheduler, rounds=5, seed=3, n_samples=200, **kw):
     seq = MFLExperiment(dataset=dataset, scheduler=scheduler,
                         n_samples=n_samples, seed=seed, eval_every=100,
-                        batched=False, **kw)
+                        engine="seq", **kw)
     bat = MFLExperiment(dataset=dataset, scheduler=scheduler,
                         n_samples=n_samples, seed=seed, eval_every=100,
-                        batched=True, **kw)
+                        engine="batched", **kw)
     seq.run(rounds)
     bat.run(rounds)
     return seq, bat
@@ -155,12 +155,12 @@ def test_batched_equivalence_ragged_shards():
 # ---------------------------------------------------------------------------
 def test_checkpoint_roundtrip_batched(tmp_path):
     exp = MFLExperiment(dataset="crema_d", scheduler="round_robin",
-                        n_samples=200, seed=7, eval_every=100, batched=True)
+                        n_samples=200, seed=7, eval_every=100)
     exp.run(3)
     exp.save(str(tmp_path))
 
     twin = MFLExperiment(dataset="crema_d", scheduler="round_robin",
-                         n_samples=200, seed=7, eval_every=100, batched=True)
+                         n_samples=200, seed=7, eval_every=100)
     assert twin.restore(str(tmp_path)) == 3
     for a, b in zip(jax.tree.leaves(exp.global_params),
                     jax.tree.leaves(twin.global_params)):

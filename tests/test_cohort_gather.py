@@ -1,0 +1,302 @@
+"""Cohort-gather path: segment-sum aggregation ≡ dense masked Eq. 12, the
+2-D ("scenario", "clients") mesh parity, and the unified engine= API.
+
+The fused round's hot path gathers the scheduled cohort's J rows and runs
+Eq. 12 / tracker updates on the [J] stack (fl/fused_round.py); the dense
+masked implementations stay the reference.  Property tests here drive both
+on random cohorts — including empty schedules and whole-population cohorts
+— and demand agreement to f32 reduction-order tolerance (the cohort keeps
+the dense path's ascending-client summation order, so weights/scatters are
+exact and only the tensordot contractions pick up reduction-order noise).
+
+The 2-D mesh subprocess test mirrors tests/test_sharded_sweep.py: 4 virtual
+CPU devices as a 2×2 scenario×clients mesh, client store + per-client
+randomness sharded, vs the single-device vmap.
+
+The engine= API tests lock the deprecation surface: legacy
+``batched=/solver=/fused=`` kwargs map onto the spec with a warning, as do
+``draw_round_xs(eval_every=...)`` and pre-policy ``warm_a`` checkpoints.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aggregation as agg
+from repro.core.convergence import (tracker_update_cohort,
+                                    tracker_update_masked)
+from repro.wireless.policies import cohort_indices
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _random_case(rng, K=12, J=5, n_mods=2, leaf_shapes=((3,), (2, 4))):
+    """Random dense round: params/stacks/upload masks + the cohort view."""
+    mods = [f"m{i}" for i in range(n_mods)]
+    a = np.zeros(K, bool)
+    a[rng.choice(K, size=rng.integers(0, J + 1), replace=False)] = True
+    idx = np.asarray(cohort_indices(jnp.asarray(a), J))
+    D = rng.uniform(1.0, 9.0, K)
+    has = {m: rng.random(K) < 0.8 for m in mods}
+    upload = {m: a & has[m] & (rng.random(K) < 0.9) for m in mods}
+    g = {m: {f"w{j}": rng.standard_normal((K,) + s).astype(np.float32)
+             for j, s in enumerate(leaf_shapes)} for m in mods}
+    glob = {m: {f"w{j}": rng.standard_normal(s).astype(np.float32)
+                for j, s in enumerate(leaf_shapes)} for m in mods}
+    # zero out non-upload rows like the masked BGD does (exact zeros)
+    gz = {m: jax.tree.map(
+        lambda x: jnp.asarray(x) * upload[m].reshape((K,) + (1,) * (x.ndim - 1)),
+        g[m]) for m in mods}
+    return mods, a, idx, D, has, upload, gz, glob
+
+
+def _gather(tree, idx):
+    return jax.tree.map(lambda x: jnp.asarray(x)[idx], tree)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_cohort_aggregation_matches_dense_eq12(seed):
+    rng = np.random.default_rng(seed)
+    K, J = 12, 5
+    mods, a, idx, D, has, upload, gz, glob = _random_case(rng, K, J)
+
+    w_dense = agg.stacked_weights_traced(D, upload)
+    new_dense = agg.aggregate_stacked_traced(glob, gz, w_dense)
+    agg_dense = agg.aggregate_gradients_stacked_traced(gz, w_dense)
+
+    upload_c = {m: jnp.asarray(upload[m])[idx] for m in mods}
+    w_c = agg.stacked_weights_traced(jnp.asarray(D, jnp.float32)[idx],
+                                     upload_c)
+    gz_c = {m: _gather(gz[m], idx) for m in mods}
+    new_cohort = agg.aggregate_stacked_traced(glob, gz_c, w_c)
+    agg_cohort = agg.aggregate_gradients_stacked_traced(gz_c, w_c)
+    w_scat = agg.cohort_weights_dense(w_c, jnp.asarray(idx), K)
+
+    for m in mods:
+        # the weight scatter is exact: duplicate-free indices, zero padding
+        np.testing.assert_array_equal(np.asarray(w_dense[m]),
+                                      np.asarray(w_scat[m]))
+        for da, ca in zip(jax.tree.leaves(new_dense[m]),
+                          jax.tree.leaves(new_cohort[m])):
+            np.testing.assert_allclose(np.asarray(da), np.asarray(ca),
+                                       atol=1e-6)
+        for da, ca in zip(jax.tree.leaves(agg_dense[m]),
+                          jax.tree.leaves(agg_cohort[m])):
+            np.testing.assert_allclose(np.asarray(da), np.asarray(ca),
+                                       atol=1e-6)
+
+
+def test_cohort_aggregation_empty_and_full_cohort():
+    rng = np.random.default_rng(99)
+    K, J = 8, 8
+    mods, a, idx, D, has, upload, gz, glob = _random_case(rng, K, J)
+
+    # empty schedule: all-False uploads keep the globals bit-identical and
+    # the weights all-zero, on both paths
+    empty = {m: np.zeros(K, bool) for m in mods}
+    idx0 = np.asarray(cohort_indices(jnp.zeros(K, bool), J))
+    w_c = agg.stacked_weights_traced(jnp.asarray(D, jnp.float32)[idx0],
+                                     {m: jnp.asarray(empty[m])[idx0]
+                                      for m in mods})
+    new_c = agg.aggregate_stacked_traced(glob, {m: _gather(gz[m], idx0)
+                                                for m in mods}, w_c)
+    for m in mods:
+        assert float(jnp.abs(w_c[m]).sum()) == 0.0
+        for ga, gb in zip(jax.tree.leaves(glob[m]),
+                          jax.tree.leaves(new_c[m])):
+            np.testing.assert_array_equal(np.asarray(ga), np.asarray(gb))
+
+    # whole-population cohort (J = K): the gather is a permutation-free
+    # identity, so cohort and dense weights agree exactly
+    full = {m: np.asarray(has[m], bool) for m in mods}
+    idx1 = np.asarray(cohort_indices(jnp.ones(K, bool), K))
+    np.testing.assert_array_equal(idx1, np.arange(K))
+    w_dense = agg.stacked_weights_traced(D, full)
+    w_c = agg.stacked_weights_traced(jnp.asarray(D, jnp.float32)[idx1],
+                                     {m: jnp.asarray(full[m])[idx1]
+                                      for m in mods})
+    for m in mods:
+        np.testing.assert_array_equal(
+            np.asarray(w_dense[m]),
+            np.asarray(agg.cohort_weights_dense(w_c, jnp.asarray(idx1), K)[m]))
+
+
+def test_cohort_indices_matches_stable_argsort_spec():
+    """cohort_indices is implemented as an O(K log J) top-k over a ranking
+    key; it must stay bit-identical to the stable-argsort specification
+    (scheduled-first, ascending within each group) for every mask."""
+    rng = np.random.default_rng(7)
+    for _ in range(100):
+        K = int(rng.integers(1, 40))
+        J = int(rng.integers(1, K + 1))
+        a = jnp.asarray(rng.random(K) < rng.random())
+        np.testing.assert_array_equal(
+            np.asarray(cohort_indices(a, J)),
+            np.asarray(jnp.argsort(~a)[:J].astype(jnp.int32)))
+
+
+def test_scatter_cohort_rows_is_exact_inverse_of_take():
+    rng = np.random.default_rng(5)
+    K, J = 10, 4
+    idx = jnp.asarray(rng.choice(K, J, replace=False).astype(np.int32))
+    vals = jnp.asarray(rng.standard_normal((J, 3)).astype(np.float32))
+    dense = np.asarray(agg.scatter_cohort_rows(vals, idx, K))
+    assert dense.shape == (K, 3)
+    np.testing.assert_array_equal(dense[np.asarray(idx)], np.asarray(vals))
+    others = np.setdiff1d(np.arange(K), np.asarray(idx))
+    np.testing.assert_array_equal(dense[others], 0.0)
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_tracker_update_cohort_matches_masked(seed):
+    rng = np.random.default_rng(seed + 40)
+    K, J = 12, 5
+    mods, a, idx, D, has, upload, gz, glob = _random_case(rng, K, J)
+    m = mods[0]
+    zeta0 = jnp.float32(rng.uniform(0.5, 2.0))
+    delta0 = jnp.asarray(rng.uniform(0.1, 1.0, K).astype(np.float32))
+    w = agg.stacked_weights_traced(D, upload)
+    ag = agg.aggregate_gradients_stacked_traced(gz, w)[m]
+
+    z_ref, d_ref = tracker_update_masked(
+        zeta0, delta0, gz[m], ag, upload[m], has[m], 0.9)
+    z_c, d_c = tracker_update_cohort(
+        zeta0, delta0, _gather(gz[m], idx), ag,
+        jnp.asarray(upload[m])[idx], jnp.asarray(idx), has[m], 0.9)
+    np.testing.assert_allclose(float(z_ref), float(z_c), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(d_ref), np.asarray(d_c), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# 2-D ("scenario", "clients") mesh parity — subprocess with 4 virtual devices
+# ---------------------------------------------------------------------------
+SCRIPT_2D = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import json
+import numpy as np
+import jax
+
+from repro.fl.runtime import MFLExperiment
+from repro.fl.fused_round import draw_round_xs
+from repro.launch.mesh import make_population_mesh
+
+exp = MFLExperiment(dataset="iemocap", scheduler="jcsba", K=10, n_samples=150,
+                    seed=0, eval_every=10 ** 9, engine="fused")
+eng = exp._get_fused_engine()
+xs = draw_round_xs(exp, 3)
+V = [0.01, 0.3, 2.0]                       # 3 points, scenario axis = 2 -> pad
+
+single = eng.scan_v_grid(V, exp._carry, xs, mesh=None)
+mesh = make_population_mesh(n_scenario=2, n_clients=2)
+assert mesh is not None and mesh.axis_names == ("scenario", "clients"), mesh
+shard = eng.scan_v_grid(V, exp._carry, xs, mesh=mesh)
+
+bit_exact = True
+for a, b in zip(jax.tree.leaves(single), jax.tree.leaves(shard)):
+    a, b = np.asarray(a), np.asarray(b)
+    assert a.shape == b.shape, (a.shape, b.shape)
+    if not np.array_equal(a, b):
+        bit_exact = False
+        np.testing.assert_allclose(a, b, rtol=2e-6, atol=1e-7)
+ok = np.asarray(shard[1].ok)               # [n_V, R, K]
+print(json.dumps({"ok": True, "devices": jax.device_count(),
+                  "bit_exact": bit_exact, "n_V": int(ok.shape[0]),
+                  "scheduled_any": bool(ok.any())}))
+"""
+
+
+def test_scan_v_grid_2d_mesh_matches_single_device():
+    env = dict(os.environ, PYTHONPATH=SRC, JAX_PLATFORMS="cpu")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", SCRIPT_2D], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stderr[-2000:]
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    assert out["ok"] and out["devices"] == 4
+    assert out["n_V"] == 3 and out["scheduled_any"]
+
+
+def test_population_mesh_requires_divisible_K():
+    from repro.launch.mesh import make_population_mesh
+    # single-device main process: the factory collapses to None like
+    # make_sweep_mesh; the divisibility check lives in scan_v_grid and is
+    # covered by the subprocess test's 10 % 2 == 0 configuration
+    assert make_population_mesh() is None
+
+
+# ---------------------------------------------------------------------------
+# engine= API: spec parsing + deprecation shims
+# ---------------------------------------------------------------------------
+def _tiny(**kw):
+    from repro.fl.runtime import MFLExperiment
+    kw.setdefault("eval_every", 10 ** 9)
+    return MFLExperiment(dataset="iemocap", scheduler="random",
+                         n_samples=120, seed=0, **kw)
+
+
+def test_engine_spec_parsing_and_defaults():
+    assert _tiny().engine == "batched:jax"
+    assert _tiny(engine="seq").engine == "seq:jax"
+    assert _tiny(engine="fused").engine == "fused:jax"
+    with pytest.raises(ValueError):
+        _tiny(engine="warp")
+
+
+def test_legacy_kwargs_map_to_engine_with_warning():
+    with pytest.warns(DeprecationWarning):
+        assert _tiny(batched=False).engine == "seq:jax"
+    with pytest.warns(DeprecationWarning):
+        assert _tiny(fused=True).engine == "fused:jax"
+    with pytest.warns(DeprecationWarning):
+        exp = _tiny(solver="np")
+    assert exp.engine == "batched:np"
+
+
+def test_draw_round_xs_eval_every_deprecated():
+    from repro.fl.fused_round import draw_round_xs
+    exp = _tiny(engine="fused", eval_every=2)
+    with pytest.warns(DeprecationWarning):
+        xs = draw_round_xs(exp, 4, eval_every=3)
+    np.testing.assert_array_equal(np.asarray(xs.eval_flag),
+                                  [True, False, False, True])
+    # without the deprecated kwarg, the experiment's cadence rules
+    xs2 = draw_round_xs(exp, 4)
+    np.testing.assert_array_equal(np.asarray(xs2.eval_flag),
+                                  [True, False, True, False])
+
+
+def test_legacy_warm_a_checkpoint_restores_with_warning(tmp_path):
+    from repro.checkpoint import save_checkpoint
+    from repro.fl.runtime import MFLExperiment
+    cfg = dict(dataset="iemocap", scheduler="jcsba", n_samples=150, seed=4,
+               eval_every=10 ** 9)
+    exp = MFLExperiment(**cfg)
+    exp.run(2)
+    pol = exp.scheduler.state()
+    assert "warm_a" in pol
+    # forge a pre-policy checkpoint: warm start as a top-level blob
+    state = {"global_params": exp.global_params, "queues_Q": exp.queues.Q,
+             "queues_spent": exp.queues.spent,
+             "delta": {m: exp.bound.delta[m] for m in exp.all_mods},
+             "model_dist": exp.model_dist, "warm_a": pol["warm_a"]}
+    meta = {"round": exp._round, "queues_t": exp.queues.t,
+            "zeta": {m: float(exp.bound.zeta[m]) for m in exp.all_mods}}
+    save_checkpoint(str(tmp_path), state, step=exp._round, metadata=meta)
+
+    twin = MFLExperiment(**cfg)
+    with pytest.warns(DeprecationWarning, match="warm_a"):
+        assert twin.restore(str(tmp_path)) == 2
+    np.testing.assert_array_equal(twin.scheduler.state()["warm_a"],
+                                  pol["warm_a"])
+    # a fresh save writes the policy/ format only — restoring it is silent
+    twin.save(str(tmp_path / "new"))
+    import warnings as _w
+    with _w.catch_warnings():
+        _w.simplefilter("error", DeprecationWarning)
+        MFLExperiment(**cfg).restore(str(tmp_path / "new"))

@@ -26,7 +26,7 @@ def test_device_eval_matches_host_adapter_stepwise():
     """Each fused run_round's record metrics come from the device eval of
     that round's aggregated params — bit-comparable to adapter.evaluate on
     the exported host mirror of the same params."""
-    fus = MFLExperiment(fused=True, scheduler="random", eval_every=1, **CFG)
+    fus = MFLExperiment(engine="fused", scheduler="random", eval_every=1, **CFG)
     for _ in range(3):
         rec = fus.run_round()
         # export_carry already mirrored the carry params to global_params
@@ -39,7 +39,7 @@ def test_device_eval_empty_cohort_round():
     latency deadline — no participants, params unchanged — and the device
     eval must still emit the (unchanged) model's metrics."""
     params = WirelessParams(K=10, B_max=1e3)      # ~nothing to allocate
-    fus = MFLExperiment(fused=True, scheduler="random", eval_every=1,
+    fus = MFLExperiment(engine="fused", scheduler="random", eval_every=1,
                         params=params, **CFG)
     rec = fus.run_round()
     assert rec.participants == []                  # genuinely empty round
@@ -51,7 +51,7 @@ def test_device_eval_cadence_inside_scan():
     """One run_scanned with eval_every=2: metrics exist exactly on the grid
     rounds, NaN fillers never leak, and the final grid round's metrics match
     the host eval of the scan's final params."""
-    fus = MFLExperiment(fused=True, scheduler="random", eval_every=2, **CFG)
+    fus = MFLExperiment(engine="fused", scheduler="random", eval_every=2, **CFG)
     fus.run_scanned(5)
     assert [bool(r.metrics) for r in fus.history] == \
         [True, False, True, False, True]
@@ -65,9 +65,9 @@ def test_scanned_curve_matches_stepwise_curve():
     """The scanned accuracy curve equals the stepwise fused curve point for
     point — eval inside lax.scan is the same program as eval in the single
     jitted step."""
-    step = MFLExperiment(fused=True, scheduler="round_robin", eval_every=2,
+    step = MFLExperiment(engine="fused", scheduler="round_robin", eval_every=2,
                         **CFG)
-    scan = MFLExperiment(fused=True, scheduler="round_robin", eval_every=2,
+    scan = MFLExperiment(engine="fused", scheduler="round_robin", eval_every=2,
                         **CFG)
     step.run(4)
     scan.run_scanned(4)
@@ -85,7 +85,7 @@ def test_v_grid_sweep_emits_curves_without_host_eval(monkeypatch):
 
     from repro.fl.fused_round import draw_round_xs
 
-    exp = MFLExperiment(fused=True, scheduler="random", eval_every=2, **CFG)
+    exp = MFLExperiment(engine="fused", scheduler="random", eval_every=2, **CFG)
     eng = exp._get_fused_engine()
     xs = draw_round_xs(exp, 4, include_final=True)
 

@@ -126,7 +126,7 @@ def _drop_round(K, seed, p_drop, n_sched=None):
     mods = _random_cohort(rng, K)
     pol = DropoutPolicy.from_modalities(K, mods, n_sched or max(K // 2, 1),
                                         p_drop)
-    _, a, _B, _J, drop = pol.step_full(
+    _, a, _B, _J, drop, _idx = pol.step_full(
         {}, {"B_max": jnp.float32(10e6)}, jnp.zeros(K, jnp.float32),
         jax.random.PRNGKey(seed))
     return pol, np.asarray(a), np.asarray(drop)

@@ -1,7 +1,7 @@
 """Contract tests for the fused round engine (fl/fused_round.py).
 
 With identical experiment seeds the fused ``round_step`` and the host-loop
-reference (both ``batched=True`` and ``batched=False``) must produce the same
+reference (both ``engine="batched"`` and ``engine="seq"``) must produce the same
 per-round participant sets, the same aggregated params to float32
 reduction-order tolerance, and matching queue / ζ-δ tracker state over ≥5
 rounds — the fused path's contract, parametrized over every traced scheduling
@@ -25,10 +25,10 @@ from repro.wireless.policies import POLICY_NAMES
 CFG = dict(n_samples=200, seed=3, eval_every=100)
 
 
-def _fused_vs_host(dataset, batched, rounds=5, scheduler="jcsba"):
-    host = MFLExperiment(dataset=dataset, batched=batched,
+def _fused_vs_host(dataset, host_engine, rounds=5, scheduler="jcsba"):
+    host = MFLExperiment(dataset=dataset, engine=host_engine,
                          scheduler=scheduler, **CFG)
-    fus = MFLExperiment(dataset=dataset, fused=True, scheduler=scheduler,
+    fus = MFLExperiment(dataset=dataset, engine="fused", scheduler=scheduler,
                         **CFG)
     host.run(rounds)
     fus.run(rounds)
@@ -70,12 +70,12 @@ def _assert_equivalent(host, fus):
 
 @pytest.mark.parametrize("policy", POLICY_NAMES)
 def test_fused_matches_batched_host_loop_iemocap(policy):
-    host, fus = _fused_vs_host("iemocap", batched=True, scheduler=policy)
+    host, fus = _fused_vs_host("iemocap", "batched", scheduler=policy)
     _assert_equivalent(host, fus)
 
 
 def test_fused_matches_sequential_host_loop_crema():
-    host, fus = _fused_vs_host("crema_d", batched=False)
+    host, fus = _fused_vs_host("crema_d", "seq")
     _assert_equivalent(host, fus)
 
 
@@ -83,7 +83,7 @@ def test_fused_matches_sequential_host_loop_crema():
 def test_fused_round_compiles_once(policy):
     """Zero host round-trips in steady state: many rounds, ONE trace of the
     fused program (the jit cache serves every subsequent round)."""
-    fus = MFLExperiment(dataset="iemocap", fused=True, scheduler=policy,
+    fus = MFLExperiment(dataset="iemocap", engine="fused", scheduler=policy,
                         **CFG)
     fus.run(6)
     assert fus._fused_engine.trace_count == 1
@@ -95,18 +95,19 @@ def test_fused_requires_traced_policy():
     now runs fused; its acceptance is covered by the parametrized
     equivalence tests above."""
     with pytest.raises(ValueError):
-        MFLExperiment(dataset="iemocap", scheduler="jcsba", solver="seq",
-                      fused=True)
+        MFLExperiment(dataset="iemocap", scheduler="jcsba",
+                      engine="fused:seq")
     with pytest.raises(ValueError):
-        MFLExperiment(dataset="iemocap", scheduler="jcsba", solver="np",
-                      fused=True)
+        MFLExperiment(dataset="iemocap", scheduler="jcsba",
+                      engine="fused:np")
 
 
 def test_fused_dropout_records_drops():
-    """The tentpole acceptance: MFLExperiment(fused=True, scheduler="dropout")
+    """The tentpole acceptance: engine="fused" with scheduler="dropout"
     runs scanned and the per-round drop masks reach the records (multimodal
     scheduled clients only, one modality at most)."""
-    fus = MFLExperiment(dataset="iemocap", fused=True, scheduler="dropout",
+    fus = MFLExperiment(dataset="iemocap", engine="fused",
+                        scheduler="dropout",
                         scheduler_kwargs={"p_drop": 0.9}, **CFG)
     fus.run_scanned(6)
     multi = [k for k, ms in enumerate(fus.client_mods) if len(ms) > 1]
@@ -140,7 +141,7 @@ def test_round_record_json_safe_under_jit():
     """Regression: RoundRecord fields produced by the fused (jitted) round
     used to be device arrays; json.dump of a history must work."""
     import jax.numpy as jnp
-    fus = MFLExperiment(dataset="iemocap", fused=True, **CFG)
+    fus = MFLExperiment(dataset="iemocap", engine="fused", **CFG)
     rec = fus.run_round()
     blob = json.dumps(dataclasses.asdict(rec))          # must not raise
     assert isinstance(rec.energy_total, float)
@@ -157,7 +158,7 @@ def test_fused_checkpoint_manifest_json_safe(tmp_path):
     """save() mid-fused-experiment writes a manifest whose metadata came from
     the device carry — the JSON dump inside save_checkpoint must succeed and
     reload with float zeta values."""
-    fus = MFLExperiment(dataset="iemocap", fused=True, **CFG)
+    fus = MFLExperiment(dataset="iemocap", engine="fused", **CFG)
     fus.run(2)
     fus.save(str(tmp_path))
     manifest = json.load(open(str(tmp_path / "ckpt_00000002.json")))

@@ -24,10 +24,10 @@ DIST0 = jnp.zeros(8, jnp.float32)
 
 
 def _step(policy, state, dist=None, seed=0):
-    """Drive the jitted 5-tuple ``policy_step`` and return the classic
-    4-tuple (tests that care about drop masks unpack ``_step_full``)."""
-    new_state, a, B, J, _ = _step_full(policy, state, dist, seed)
-    return new_state, a, B, J
+    """Drive the jitted 6-tuple ``policy_step`` and return the classic
+    4-tuple (tests that care about drop masks / cohort vectors unpack
+    ``_step_full``)."""
+    return _step_full(policy, state, dist, seed)[:4]
 
 
 def _step_full(policy, state, dist=None, seed=0):
@@ -88,7 +88,7 @@ def test_dropout_policy_drop_mask_semantics():
     owns = np.asarray(pol.owns)
     dropped_any = False
     for seed in range(5):
-        state, a, B, J, drop = _step_full(pol, {}, seed=seed)
+        state, a, B, J, drop, _ = _step_full(pol, {}, seed=seed)
         a, drop = np.asarray(a), np.asarray(drop)
         assert drop.shape == (2, 8)
         assert (drop <= owns).all()                 # only owned modalities
@@ -108,8 +108,29 @@ def test_dropout_policy_drop_mask_semantics():
 def test_non_dropout_policies_emit_zero_row_drop_mask():
     for name in ("random", "round_robin", "selection"):
         pol = make_policy(name, 5, [("a",)] * 5)
-        *_, drop = _step_full(pol, pol.init_state())
+        *_, drop, _idx = _step_full(pol, pol.init_state())
         assert drop.shape == (0, 5)
+
+
+def test_cohort_idx_lists_scheduled_clients_first():
+    """The sixth ``step_full`` output: a static-size, duplicate-free index
+    vector whose leading ``a.sum()`` entries are exactly the scheduled
+    clients in ascending order (stable argsort), padded with unscheduled
+    indices that downstream ``a[idx]`` masks neutralize."""
+    for name in ("random", "round_robin", "selection", "dropout"):
+        pol = make_policy(name, 8, [("a", "b")] * 4 + [("a",)] * 4)
+        dist = np.arange(8)[::-1].astype(np.float32)
+        for seed in range(3):
+            _, a, *_rest, idx = _step_full(pol, pol.init_state(), dist=dist,
+                                           seed=seed)
+            a, idx = np.asarray(a), np.asarray(idx)
+            assert idx.shape == (pol.cohort_size,) and idx.dtype == np.int32
+            assert len(set(idx.tolist())) == len(idx)          # no duplicates
+            n = int(a.sum())
+            assert n <= pol.cohort_size
+            np.testing.assert_array_equal(np.sort(idx[:n]), idx[:n])
+            np.testing.assert_array_equal(idx[:n], np.flatnonzero(a))
+            assert not a[idx[n:]].any()                        # padding slots
 
 
 def test_make_policy_factory_and_unknown_name():
@@ -165,7 +186,7 @@ def test_bind_rebuilds_on_config_change_and_keeps_state_otherwise():
 @pytest.mark.parametrize("policy", POLICY_NAMES)
 def test_policy_state_roundtrips_through_checkpoint(tmp_path, policy):
     cfg = dict(dataset="iemocap", scheduler=policy, n_samples=200, seed=7,
-               eval_every=100, fused=True)
+               eval_every=100, engine="fused")
     exp = MFLExperiment(**cfg)
     exp.run(3)
     exp.save(str(tmp_path))

@@ -27,7 +27,7 @@ from repro.fl.fused_round import draw_round_xs
 from repro.launch.mesh import make_sweep_mesh
 
 exp = MFLExperiment(dataset="iemocap", scheduler="jcsba", K=6, n_samples=120,
-                    seed=0, eval_every=10 ** 9, fused=True)
+                    seed=0, eval_every=10 ** 9, engine="fused")
 eng = exp._get_fused_engine()
 xs = draw_round_xs(exp, 3)
 V = [0.01, 0.1, 1.0, 10.0, 3.0]            # 5 points on 4 devices -> padding

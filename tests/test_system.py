@@ -71,7 +71,7 @@ def test_baselines_can_fail_transmission():
 # ---------------------------------------------------------------------------
 def _fused_exp():
     return MFLExperiment(dataset="iemocap", scheduler="jcsba", n_samples=200,
-                         seed=5, eval_every=100, fused=True)
+                         seed=5, eval_every=100, engine="fused")
 
 
 def test_run_scanned_matches_stepwise_bit_for_bit():
