@@ -32,6 +32,12 @@ Benchmarks:
                         round, stepwise and under lax.scan, plus the
                         whole-experiment V-grid sweep
                         (see benchmarks/fused_round.py)
+  fusion_kernel_*     — custom-VJP Pallas fusion loss on the cohort BGD hot
+                        path: fused rounds XLA vs kernel-backed loss across
+                        J and samples/client, raw loss value_and_grad, and
+                        the Gram-form ζ/δ tracker refresh vs the
+                        direct-difference path
+                        (see benchmarks/fusion_kernel.py)
 """
 from __future__ import annotations
 
@@ -255,6 +261,35 @@ def bench_fused_round(quick: bool):
          f"rounds={s['rounds']}")
 
 
+def bench_fusion_kernel(quick: bool):
+    from benchmarks.fusion_kernel import run_benchmark
+    if TINY:
+        out = run_benchmark([4], spc_grid=[2.0], rounds=2,
+                            raw_shape=(2, 64, 512), raw_blocks=(32, 256),
+                            tracker_J=4, tracker_leaves=((32, 16), (16,)))
+    elif quick:
+        out = run_benchmark([6], spc_grid=[2.0], rounds=2,
+                            raw_shape=(2, 256, 4096),
+                            raw_blocks=(128, 2048))
+    else:
+        out = run_benchmark([6, 10], spc_grid=[2.0, 8.0], rounds=3)
+    PAYLOADS["fusion_kernel"] = out
+    for r in out["per_round"]:
+        emit(f"fusion_kernel_round_K={r['K']}_spc={r['samples_per_client']:g}",
+             1e6 / r["pallas_rounds_per_sec"],
+             f"xla_rps={r['xla_rounds_per_sec']};"
+             f"pallas_rps={r['pallas_rounds_per_sec']};"
+             f"ratio={r['pallas_vs_xla']}x")
+    raw = out["raw_loss"]
+    emit("fusion_kernel_raw_loss", raw["pallas_ms"] * 1e3,
+         f"xla_ms={raw['xla_ms']};pallas_ms={raw['pallas_ms']};"
+         f"backend={raw['backend']}")
+    t = out["tracker"]
+    emit("fusion_kernel_tracker", t["gram_ms"] * 1e3,
+         f"diff_ms={t['diff_ms']};gram_ms={t['gram_ms']};"
+         f"speedup={t['gram_vs_diff']}x;drift={t['max_drift']:.2e}")
+
+
 def bench_batched_rounds(quick: bool):
     from benchmarks.batched_rounds import run_benchmark
     if TINY:
@@ -299,6 +334,7 @@ def main() -> None:
         "batched_rounds": bench_batched_rounds,
         "jcsba_solver": bench_jcsba_solver,
         "fused_round": bench_fused_round,
+        "fusion_kernel": bench_fusion_kernel,
     }
     if args.v_frontier:
         args.only = "v_frontier"

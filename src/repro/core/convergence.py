@@ -27,10 +27,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .trees import tree_norm, tree_sq_norm
+
 
 def _tree_norm(tree) -> float:
-    return float(jnp.sqrt(sum(jnp.vdot(x, x).real
-                              for x in jax.tree.leaves(tree))))
+    return float(tree_norm(tree))
 
 
 def _tree_sub(a, b):
@@ -196,13 +197,82 @@ class BoundState:
 
 
 # ---------------------------------------------------------------------------
-# Pure jnp twin of BoundState.update_stacked — one modality's ζ/δ refresh as
+# Pure jnp twins of BoundState.update_stacked — one modality's ζ/δ refresh as
 # a mask-driven array program, so the tracker update fuses into the per-round
 # program of the fused round engine (fl/fused_round.py).  Same semantics as
 # the host version: rows with real uploads take their measured divergence,
 # stale owners decay toward the fresh mean, and with no uploads at all the
 # state is unchanged.
+#
+# The refresh is split into *partials* (ζ_new + per-client divergence norms —
+# the only part that touches the gradient stack) and a shared mask/decay
+# core (``_tracker_refresh``).  Two partials producers exist:
+#
+# * ``tracker_partials_diff`` — the direct O(J·|θ|) difference pass against a
+#   pre-aggregated gradient (the historical form, kept for the host-parity
+#   paths);
+# * ``tracker_partials_gram`` — consumes a per-modality Gram matrix
+#   G = Σ_leaves X Xᵀ (``grad_gram``, [J, J]) and the Eq. 12 weights:
+#   ζ² = wᵀGw and δ_j² = G_jj − 2(Gw)_j + wᵀGw, so the fused round needs
+#   NO aggregated gradient and no second reduction pass over the stack —
+#   one Gram contraction yields every tracker statistic
+#   (benchmarks/fusion_kernel.py measures the retired pass).
 # ---------------------------------------------------------------------------
+def tracker_partials_diff(stacked_g, agg_g):
+    """(ζ_new, per-row ‖g_j − ḡ‖ [J]) by direct difference against the
+    aggregate — one full pass over the [J, ...] gradient stack."""
+    lead = jax.tree.leaves(stacked_g)[0].shape[0]
+    zeta_new = jnp.sqrt(tree_sq_norm(agg_g))
+    sq = sum(jnp.square(gs - ga[None]).reshape(lead, -1).sum(axis=1)
+             for gs, ga in zip(jax.tree.leaves(stacked_g),
+                               jax.tree.leaves(agg_g)))
+    return zeta_new, jnp.sqrt(sq)
+
+
+def grad_gram(stacked_g):
+    """Per-modality Gram matrix of a stacked gradient pytree: [J, J] with
+    G_ij = ⟨g_i, g_j⟩ summed over leaves — the single contraction pass the
+    Gram-form tracker refresh needs (zero-padded rows yield zero rows, so
+    cohort padding is harmless)."""
+    leaves = jax.tree.leaves(stacked_g)
+    lead = leaves[0].shape[0]
+    return sum(jnp.matmul(x.reshape(lead, -1), x.reshape(lead, -1).T)
+               for x in leaves)
+
+
+def tracker_partials_gram(gram, w):
+    """(ζ_new, per-row ‖g_j − ḡ‖) from the Gram matrix and aggregation
+    weights, via ḡ = Σ_j w_j g_j: ζ² = wᵀGw, δ_j² = G_jj − 2(Gw)_j + wᵀGw
+    (clamped at 0 against f32 cancellation)."""
+    w = jnp.asarray(w, gram.dtype)
+    gw = gram @ w                                               # [J]
+    wgw = w @ gw
+    zeta_new = jnp.sqrt(jnp.maximum(wgw, 0.0))
+    sq = jnp.maximum(jnp.diagonal(gram) - 2.0 * gw + wgw, 0.0)
+    return zeta_new, jnp.sqrt(sq)
+
+
+def _tracker_refresh(zeta_m, delta_m, zeta_new, norms_c, mask_c, idx, has_m,
+                     staleness: float):
+    """Shared mask/decay core: scatter cohort-local divergence norms into the
+    dense [K] δ row (``idx`` [J] duplicate-free; the dense path passes
+    ``arange(K)``), decay stale owners toward the fresh mean, keep everything
+    unchanged when nothing uploaded."""
+    mask_c = jnp.asarray(mask_c, bool)
+    has_m = jnp.asarray(has_m, bool)
+    any_m = mask_c.any()
+    mean_d = (norms_c * mask_c).sum() / jnp.maximum(mask_c.sum(), 1)
+    decayed = staleness * delta_m + (1.0 - staleness) * mean_d
+    K = delta_m.shape[0]
+    uploaded = jnp.zeros(K, bool).at[idx].set(mask_c)
+    norms_k = jnp.zeros(K, delta_m.dtype).at[idx].set(
+        jnp.where(mask_c, norms_c, 0.0))
+    delta_new = jnp.where(uploaded, norms_k,
+                          jnp.where(has_m & ~uploaded, decayed, delta_m))
+    return (jnp.where(any_m, zeta_new, zeta_m),
+            jnp.where(any_m, delta_new, delta_m))
+
+
 def tracker_update_masked(zeta_m, delta_m, stacked_g, agg_g, mask, has_m,
                           staleness: float):
     """Refresh (ζ_m, δ_{·,m}) from a stacked gradient pytree.
@@ -212,22 +282,10 @@ def tracker_update_masked(zeta_m, delta_m, stacked_g, agg_g, mask, has_m,
     is empty); ``mask``/``has_m`` are bool [K] (uploaded this round / owns the
     modality).  Traced-safe: every branch of the host version becomes a
     ``jnp.where``."""
-    mask = jnp.asarray(mask, bool)
-    has_m = jnp.asarray(has_m, bool)
+    zeta_new, norms = tracker_partials_diff(stacked_g, agg_g)
     K = delta_m.shape[0]
-    any_m = mask.any()
-    zeta_new = jnp.sqrt(sum(jnp.vdot(x, x).real
-                            for x in jax.tree.leaves(agg_g)))
-    sq = sum(jnp.square(gs - ga[None]).reshape(K, -1).sum(axis=1)
-             for gs, ga in zip(jax.tree.leaves(stacked_g),
-                               jax.tree.leaves(agg_g)))
-    norms = jnp.sqrt(sq)
-    mean_d = (norms * mask).sum() / jnp.maximum(mask.sum(), 1)
-    decayed = staleness * delta_m + (1.0 - staleness) * mean_d
-    delta_new = jnp.where(mask, norms,
-                          jnp.where(has_m & ~mask, decayed, delta_m))
-    return (jnp.where(any_m, zeta_new, zeta_m),
-            jnp.where(any_m, delta_new, delta_m))
+    return _tracker_refresh(zeta_m, delta_m, zeta_new, norms, mask,
+                            jnp.arange(K), has_m, staleness)
 
 
 def tracker_update_cohort(zeta_m, delta_m, cohort_g, agg_g, mask_c, idx,
@@ -241,26 +299,22 @@ def tracker_update_cohort(zeta_m, delta_m, cohort_g, agg_g, mask_c, idx,
     dense ownership.  Cohort slots appear in ascending client order with
     zeros elsewhere, so the fresh-mean reduction matches the dense path's
     summation order bit for bit."""
-    mask_c = jnp.asarray(mask_c, bool)
-    has_m = jnp.asarray(has_m, bool)
-    J = mask_c.shape[0]
-    any_m = mask_c.any()
-    zeta_new = jnp.sqrt(sum(jnp.vdot(x, x).real
-                            for x in jax.tree.leaves(agg_g)))
-    sq = sum(jnp.square(gs - ga[None]).reshape(J, -1).sum(axis=1)
-             for gs, ga in zip(jax.tree.leaves(cohort_g),
-                               jax.tree.leaves(agg_g)))
-    norms_c = jnp.sqrt(sq)                                      # [J]
-    mean_d = (norms_c * mask_c).sum() / jnp.maximum(mask_c.sum(), 1)
-    decayed = staleness * delta_m + (1.0 - staleness) * mean_d
-    K = delta_m.shape[0]
-    uploaded = jnp.zeros(K, bool).at[idx].set(mask_c)
-    norms_k = jnp.zeros(K, delta_m.dtype).at[idx].set(
-        jnp.where(mask_c, norms_c, 0.0))
-    delta_new = jnp.where(uploaded, norms_k,
-                          jnp.where(has_m & ~uploaded, decayed, delta_m))
-    return (jnp.where(any_m, zeta_new, zeta_m),
-            jnp.where(any_m, delta_new, delta_m))
+    zeta_new, norms_c = tracker_partials_diff(cohort_g, agg_g)
+    return _tracker_refresh(zeta_m, delta_m, zeta_new, norms_c, mask_c, idx,
+                            has_m, staleness)
+
+
+def tracker_update_gram(zeta_m, delta_m, gram, w_c, mask_c, idx, has_m,
+                        staleness: float):
+    """Gram-form cohort refresh — what the fused round engine runs.  Takes
+    the [J, J] Gram matrix (``grad_gram``) and the cohort's Eq. 12 weights
+    ``w_c`` [J] instead of gradient stacks, so the ζ/δ refresh costs O(J²)
+    on top of the single Gram contraction and the aggregated gradient is
+    never materialised.  Agrees with ``tracker_update_cohort`` to f32
+    reduction/cancellation tolerance (tests/test_fusion_vjp.py)."""
+    zeta_new, norms_c = tracker_partials_gram(gram, w_c)
+    return _tracker_refresh(zeta_m, delta_m, zeta_new, norms_c, mask_c, idx,
+                            has_m, staleness)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,34 @@
+"""Shared pytree reductions — squared norms, dots, distances.
+
+One implementation for every consumer of ‖·‖-type statistics over parameter
+or gradient pytrees: the Theorem-1 ζ/δ trackers (``core.convergence``), the
+Selection scheduler's ‖θ_k − θ⁰‖ bookkeeping (``fl/client.py`` cohort step)
+and the host round loops.  All reductions are leaf-ordered sums of
+``jnp.vdot`` contractions, so host and traced callers see bit-identical
+results for the same pytree.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_sq_norm(tree):
+    """Σ_leaves ‖x‖² (a 0-d array under trace, a scalar array on host)."""
+    return sum(jnp.vdot(x, x).real for x in jax.tree.leaves(tree))
+
+
+def tree_norm(tree):
+    return jnp.sqrt(tree_sq_norm(tree))
+
+
+def tree_dot(a, b):
+    """Σ_leaves ⟨x, y⟩ over two pytrees of identical structure."""
+    return sum(jnp.vdot(x, y).real
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def tree_sq_dist(a, b):
+    """Σ_leaves ‖x − y‖² — squared distance between two pytrees."""
+    return sum(jnp.vdot(x - y, x - y).real
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))

@@ -19,7 +19,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import fusion
+from ..core.trees import tree_sq_dist
 from ..data.partition import ClientData
+from ..kernels.fusion_loss import ops as fusion_kops
 from ..models import paper_models as pm
 from .eval import eval_metrics
 
@@ -37,12 +39,35 @@ class PaperModelAdapter:
 
     def __init__(self, dataset_name: str, eta: float = 0.05,
                  v_weights: Optional[Mapping[str, float]] = None,
-                 dropout: float = 0.1):
+                 dropout: float = 0.1, loss_backend: str = "xla"):
+        if loss_backend not in ("xla", "pallas"):
+            raise ValueError(
+                f"unknown loss_backend {loss_backend!r}; expected "
+                f"'xla' (core.fusion) or 'pallas' (kernels/fusion_loss "
+                f"custom-VJP one-pass loss)")
         self.dataset_name = dataset_name
         self.eta = eta
         self.v_weights = dict(self.DEFAULT_V if v_weights is None
                               else v_weights)
         self.dropout = dropout
+        self.loss_backend = loss_backend
+
+    def _loss_fn(self, v_weights):
+        """The H_k = F + Σ v_m·G_m computation, backend-selected: the plain
+        XLA ``core.fusion.multimodal_loss`` or the one-pass Pallas kernel
+        with its custom-VJP backward (``kernels.fusion_loss.ops``) —
+        identical semantics, locked by tests/test_fusion_vjp.py."""
+        if self.loss_backend == "pallas":
+            def loss(logits, labels, avail=None, sample_mask=None):
+                return fusion_kops.fused_multimodal_loss(
+                    logits, labels, v_weights, avail=avail,
+                    sample_mask=sample_mask)
+        else:
+            def loss(logits, labels, avail=None, sample_mask=None):
+                return fusion.multimodal_loss(
+                    logits, labels, v_weights, avail=avail,
+                    sample_mask=sample_mask)
+        return loss
 
     # ------------------------------------------------------------------
     def init_global(self, key) -> Dict[str, dict]:
@@ -56,12 +81,13 @@ class PaperModelAdapter:
     @functools.lru_cache(maxsize=32)
     def _update_fn(self, mods: Tuple[str, ...]):
         v_weights = {m: self.v_weights.get(m, 1.0) for m in mods}
+        loss_impl = self._loss_fn(v_weights)
 
         @jax.jit
         def step(params, feats, labels, rng):
             def loss(p):
                 logits = pm.modal_logits(p, feats, dropout_rng=rng)
-                total, met = fusion.multimodal_loss(logits, labels, v_weights)
+                total, met = loss_impl(logits, labels)
                 return total, met["F"]
 
             (total, F), grads = jax.value_and_grad(loss, has_aux=True)(params)
@@ -96,6 +122,7 @@ class PaperModelAdapter:
         per-round program, so both execute the identical computation."""
         v_weights = {m: self.v_weights.get(m, 1.0) for m in mods}
         eta = self.eta
+        loss_impl = self._loss_fn(v_weights)
 
         def step(params, init_params, feats, labels, smask, avail, seeds):
             def one(feats_k, labels_k, smask_k, avail_k, seed_k):
@@ -103,19 +130,15 @@ class PaperModelAdapter:
 
                 def loss(p):
                     logits = pm.modal_logits(p, feats_k, dropout_rng=rng)
-                    total, met = fusion.multimodal_loss(
-                        logits, labels_k, v_weights, avail=avail_k,
-                        sample_mask=smask_k)
+                    total, met = loss_impl(logits, labels_k, avail=avail_k,
+                                           sample_mask=smask_k)
                     return total, met["F"]
 
                 (total, _), grads = jax.value_and_grad(
                     loss, has_aux=True)(params)
                 new = jax.tree.map(lambda p, g: p - eta * g, params, grads)
-                dist_sq = {
-                    m: sum(jnp.vdot(n_ - i_, n_ - i_).real
-                           for n_, i_ in zip(jax.tree.leaves(new[m]),
-                                             jax.tree.leaves(init_params[m])))
-                    for m in mods}
+                dist_sq = {m: tree_sq_dist(new[m], init_params[m])
+                           for m in mods}
                 return new, grads, total, dist_sq
 
             ax0 = {m: 0 for m in mods}
@@ -171,6 +194,7 @@ class PaperModelAdapter:
 
     def __hash__(self):   # lru_cache on methods needs a hashable self
         return hash((self.dataset_name, self.eta, self.dropout,
+                     self.loss_backend,
                      tuple(sorted(self.v_weights.items()))))
 
     def __eq__(self, other):

@@ -26,8 +26,8 @@ stage:
   ``"clients"`` axis reassembles them bit-exactly.
 
 Everything model-sized downstream — the vmapped BGD, the Eq. 12 contraction
-(``core.aggregation``), the ζ/δ divergence norms
-(``core.convergence.tracker_update_cohort``) — runs on [J]-leading stacks;
+(``core.aggregation``), the ζ/δ divergence norms (Gram-form
+``core.convergence.tracker_update_gram``) — runs on [J]-leading stacks;
 cohort-local results are scattered back to dense [K] rows through the index
 vector (a ``segment_sum``, exact because the indices are duplicate-free).
 Only O(K) *vector* physics stays dense: channel rates, latency feasibility,
@@ -96,7 +96,7 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from ..core import aggregation as agg
-from ..core.convergence import tracker_update_cohort
+from ..core.convergence import grad_gram, tracker_update_gram
 from .eval import device_test_set, eval_metrics, nan_metrics
 from ..launch.mesh import make_sweep_mesh
 from ..launch.sharding import (logical_pspec, pad_leading_axis,
@@ -478,15 +478,18 @@ class FusedRoundEngine:
         # Every contributor is in the cohort by construction, so the weight
         # renormalisation over J equals the dense one over K; the dense [K]
         # weight rows the aux records keep are the segment-sum scatter.
+        # The trackers consume the per-modality gradient Gram matrix
+        # G = Σ_leaves X Xᵀ [J, J]: ζ² = wᵀGw and δ_j² = G_jj − 2(Gw)_j +
+        # wᵀGw, so the refresh needs no aggregated-gradient pytree and no
+        # second O(J·|θ|) reduction pass over the gradient stack.
         w_c = agg.stacked_weights_traced(cohort.sizes, upload_c)
         new_params = agg.aggregate_stacked_traced(carry.params, newp_c, w_c)
-        agg_grads = agg.aggregate_gradients_stacked_traced(grads_c, w_c)
         w = agg.cohort_weights_dense(w_c, idx, self.K)
         zs, ds = [], []
         for i, m in enumerate(self.mods):
-            z_m, d_m = tracker_update_cohort(
-                carry.zeta[i], carry.delta[i], grads_c[m], agg_grads[m],
-                upload_c[m], idx, self._has[i], self.staleness)
+            z_m, d_m = tracker_update_gram(
+                carry.zeta[i], carry.delta[i], grad_gram(grads_c[m]),
+                w_c[m], upload_c[m], idx, self._has[i], self.staleness)
             zs.append(z_m)
             ds.append(d_m)
 

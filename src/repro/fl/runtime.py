@@ -174,7 +174,14 @@ class MFLExperiment:
             raise ValueError(
                 f"unknown engine {engine!r}; expected "
                 f"'seq' | 'batched' | 'fused' with an optional "
-                f"':<jcsba backend>' suffix")
+                f"':<backend>' suffix (a jcsba solver backend 'np'/'seq', "
+                f"or 'pallas' for the kernel-backed loss)")
+        # backend token routing: 'pallas' selects the custom-VJP Pallas
+        # fusion-loss on the client BGD hot path (kernels/fusion_loss) and
+        # leaves the JCSBA solver on its traced 'jax' core; 'np'/'seq'
+        # remain the host-side JCSBA parity solvers on the XLA loss.
+        loss_backend = "pallas" if backend == "pallas" else "xla"
+        solver_backend = "jax" if backend == "pallas" else backend
         self.engine = f"{loop}:{backend}"
         self.rng = np.random.default_rng(seed)
         self.params = params or WirelessParams(K=K)
@@ -196,7 +203,8 @@ class MFLExperiment:
         self.data_sizes = [c.size for c in self.clients]
         self.profile = MODALITY_PROFILES[dataset]
 
-        self.adapter = PaperModelAdapter(dataset, eta=eta)
+        self.adapter = PaperModelAdapter(dataset, eta=eta,
+                                         loss_backend=loss_backend)
         self.global_params = self.adapter.init_global(jax.random.key(seed))
         self.init_params = jax.tree.map(lambda x: x, self.global_params)
 
@@ -212,7 +220,7 @@ class MFLExperiment:
         kw = dict(scheduler_kwargs or {})
         if scheduler == "jcsba":
             kw.setdefault("V", V)
-            kw.setdefault("solver", backend)
+            kw.setdefault("solver", solver_backend)
         self.scheduler: Scheduler = make_scheduler(scheduler, self.rng, **kw)
         self.scheduler.bind(K, self.client_mods)
         if self.fused and self.scheduler.policy is None:

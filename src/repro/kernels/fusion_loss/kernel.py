@@ -1,14 +1,34 @@
-"""Pallas TPU kernel: fused decision-level-fusion + softmax-CE.
+"""Pallas TPU kernels: fused decision-level-fusion + softmax-CE, fwd + bwd.
 
 The paper's claim (§II) is that adding the unimodal losses is computationally
 free because the unimodal logits already exist.  At LM scale the *loss itself*
 becomes the bottleneck: materialising M softmaxes over a 151k-262k vocab is
-HBM-bound.  This kernel tiles the vocab axis into VMEM blocks and computes the
-fused log-sum-exp and all M per-modality CEs in ONE pass over the logits —
-each logit element is read exactly once from HBM.
+HBM-bound.  The forward kernel tiles the vocab axis into VMEM blocks and
+computes the fused log-sum-exp and all M per-modality CEs in ONE pass over the
+logits — each logit element is read exactly once from HBM.  With
+``save_residuals=True`` it additionally emits the online-softmax residuals
+(per-row max and log-sum-exp for the fused mixture and every unimodal head),
+which is everything the backward needs besides the logits themselves.
 
-Grid: (T/Tb, V/Vb), vocab innermost; online (streaming) logsumexp state lives
-in VMEM scratch across vocab tiles.
+The backward kernel (``fusion_loss_bwd_pallas``) re-reads the logits once and
+emits ``dlogits`` per modality in a single blocked pass — softmax
+probabilities exist only tile-at-a-time in VMEM, never materialised:
+
+    d x[m,t,v] = gf[t]·(avail[m,t]/denom[t])·(p_f[t,v] − 1{v=y_t})
+               + gm[m,t]·avail[m,t]·(p_m[m,t,v] − 1{v=y_t})
+
+where p_f/p_m are reconstructed from the saved residuals.  ``avail``
+multiplies every term, so masked modalities and padded rows get *exact-zero*
+gradients.  As free by-products the backward accumulates, across all tiles,
+the per-modality squared norm ‖dx_m‖² and the dot ⟨dx_m, g_fused⟩ of the
+logits gradient (``gsq``/``gdot`` — the Theorem-1 ζ/δ partials in logits
+space; see core.convergence for the param-space twin).
+
+Grid: (T/Tb, V/Vb), vocab innermost; streaming state lives in VMEM scratch
+across vocab tiles.  Per-modality logits arrive as separate refs (variadic),
+so callers never materialise an [M, T, V] stack in HBM; a broadcast head
+(e.g. vision [B, 1, V] against labels [B, S]) is fed as its compact [B, V]
+array with a tile→batch-row index map (``seg[m] = S``, requires Tb | S).
 """
 from __future__ import annotations
 
@@ -22,11 +42,47 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _kernel(labels_ref, logits_ref, avail_ref,
-            fused_nll_ref, modal_nll_ref,
-            mf, sf, gf, mm, sm, gm, *, n_mod: int, block_v: int):
+def _load_stack(logit_refs, bt: int, bv: int):
+    """Stack the per-modality tiles in VMEM ([M, Tb, Vb], f32).  A broadcast
+    modality's tile is [1, Vb] and broadcasts over the token rows."""
+    return jnp.stack([jnp.broadcast_to(r[...].astype(jnp.float32), (bt, bv))
+                      for r in logit_refs])
+
+
+def _gold_pick(labels, iv, block_v: int):
+    """Bool [Tb, Vb]: True where this vocab tile holds the gold column."""
+    idx = labels - iv * block_v
+    in_tile = (idx >= 0) & (idx < block_v)
+    safe = jnp.clip(idx, 0, block_v - 1)
+    onehot = (jax.lax.broadcasted_iota(jnp.int32,
+                                       (labels.shape[0], block_v), 1)
+              == safe[:, None])
+    return jnp.where(in_tile[:, None], onehot, False)
+
+
+def _fused_tile(logits, avail, iv, block_v: int, v_real: int):
+    """Availability-averaged mixture tile with padded vocab columns pinned to
+    NEG_INF (keeps the fused LSE independent of vocab padding even on rows
+    where every modality is unavailable and the mixture degenerates to 0)."""
+    denom = jnp.maximum(avail.sum(0), 1e-9)                 # [Tb]
+    fused = (jnp.einsum("mtv,mt->tv", logits, avail)
+             / denom[:, None])                              # [Tb, Vb]
+    col = (jax.lax.broadcasted_iota(jnp.int32, fused.shape, 1)
+           + iv * block_v)
+    return jnp.where(col < v_real, fused, NEG_INF), denom
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+def _fwd_kernel(labels_ref, avail_ref, *refs, n_mod: int, block_v: int,
+                v_real: int, save_residuals: bool):
     iv = pl.program_id(1)
     nv = pl.num_programs(1)
+    logit_refs = refs[:n_mod]
+    n_out = 6 if save_residuals else 2
+    outs = refs[n_mod:n_mod + n_out]
+    mf, sf, gf, mm, sm, gm = refs[n_mod + n_out:]
 
     @pl.when(iv == 0)
     def _init():
@@ -37,76 +93,110 @@ def _kernel(labels_ref, logits_ref, avail_ref,
         sm[...] = jnp.zeros_like(sm)
         gm[...] = jnp.zeros_like(gm)
 
-    logits = logits_ref[...].astype(jnp.float32)           # [M, Tb, Vb]
-    avail = avail_ref[...].astype(jnp.float32)             # [M, Tb]
-    labels = labels_ref[...]                               # [Tb]
-
-    denom = jnp.maximum(avail.sum(0), 1e-9)                # [Tb]
-    fused = (jnp.einsum("mtv,mt->tv", logits, avail)
-             / denom[:, None])                             # [Tb, Vb]
+    bt = labels_ref.shape[0]
+    logits = _load_stack(logit_refs, bt, block_v)           # [M, Tb, Vb]
+    avail = avail_ref[...].astype(jnp.float32)              # [M, Tb]
+    labels = labels_ref[...]                                # [Tb]
+    fused, _ = _fused_tile(logits, avail, iv, block_v, v_real)
 
     # --- streaming logsumexp: fused ---
-    tile_max = fused.max(axis=-1)                          # [Tb]
+    tile_max = fused.max(axis=-1)                           # [Tb]
     m_new = jnp.maximum(mf[...], tile_max)
     sf[...] = (sf[...] * jnp.exp(mf[...] - m_new)
                + jnp.exp(fused - m_new[:, None]).sum(-1))
     mf[...] = m_new
 
     # --- streaming logsumexp: per modality ---
-    t_max = logits.max(axis=-1)                            # [M, Tb]
+    t_max = logits.max(axis=-1)                             # [M, Tb]
     mm_new = jnp.maximum(mm[...], t_max)
     sm[...] = (sm[...] * jnp.exp(mm[...] - mm_new)
                + jnp.exp(logits - mm_new[..., None]).sum(-1))
     mm[...] = mm_new
 
     # --- gold logit extraction (label may fall in this vocab tile) ---
-    v0 = iv * block_v
-    idx = labels - v0                                      # [Tb]
-    in_tile = (idx >= 0) & (idx < block_v)
-    safe = jnp.clip(idx, 0, block_v - 1)
-    onehot = (jax.lax.broadcasted_iota(jnp.int32, (labels.shape[0], block_v), 1)
-              == safe[:, None])
-    pick = jnp.where(in_tile[:, None], onehot, False)
+    pick = _gold_pick(labels, iv, block_v)
     gf[...] = gf[...] + jnp.where(pick, fused, 0.0).sum(-1)
     gm[...] = gm[...] + jnp.where(pick[None], logits, 0.0).sum(-1)
 
     @pl.when(iv == nv - 1)
     def _finalize():
-        fused_nll_ref[...] = (mf[...] + jnp.log(sf[...]) - gf[...]
-                              ).astype(fused_nll_ref.dtype)
-        nll = mm[...] + jnp.log(sm[...]) - gm[...]
-        modal_nll_ref[...] = (nll * avail).astype(modal_nll_ref.dtype)
+        f_lse = mf[...] + jnp.log(sf[...])
+        m_lse = mm[...] + jnp.log(sm[...])
+        outs[0][...] = (f_lse - gf[...]).astype(outs[0].dtype)
+        outs[1][...] = ((m_lse - gm[...]) * avail).astype(outs[1].dtype)
+        if save_residuals:
+            outs[2][...] = mf[...]
+            outs[3][...] = f_lse
+            outs[4][...] = mm[...]
+            outs[5][...] = m_lse
 
 
-@functools.partial(jax.jit, static_argnames=("block_t", "block_v", "interpret"))
-def fusion_loss_pallas(logits: jax.Array, labels: jax.Array,
-                       avail: jax.Array, *, block_t: int = 128,
-                       block_v: int = 2048, interpret: bool = False):
-    """logits [M,T,V], labels [T] int32, avail [M,T] -> (fused_nll [T],
-    modal_nll [M,T]), both f32."""
-    M, T, V = logits.shape
-    block_t = min(block_t, T)
-    block_v = min(block_v, V)
+def _logit_specs(seg, block_t: int, block_v: int):
+    """Per-modality input BlockSpecs.  ``seg[m] == 0`` → full [T, V] operand
+    tiled (Tb, Vb); ``seg[m] == S`` → compact [B, V] operand whose token tile
+    maps onto one batch row (requires Tb | S so tiles never straddle rows)."""
+    specs = []
+    for s in seg:
+        if s:
+            assert s % block_t == 0, (s, block_t)
+            specs.append(pl.BlockSpec(
+                (1, block_v),
+                functools.partial(_seg_map, bt=block_t, S=s)))
+        else:
+            specs.append(pl.BlockSpec((block_t, block_v),
+                                      lambda it, iv: (it, iv)))
+    return specs
+
+
+def _seg_map(it, iv, *, bt: int, S: int):
+    return ((it * bt) // S, iv)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "block_t", "block_v", "v_real", "seg", "save_residuals", "interpret"))
+def fusion_loss_fwd_pallas(logits, labels, avail, *, block_t: int,
+                           block_v: int, v_real: int, seg,
+                           save_residuals: bool = False,
+                           interpret: bool = False):
+    """Variadic forward.  ``logits`` is a tuple of per-modality arrays —
+    [T, V], or [B, V] when ``seg[m] = S`` marks a broadcast head (T = B·S);
+    labels [T] int32; avail [M, T].  Shapes must tile exactly (the
+    differentiable ops.py wrapper pads); ``v_real`` ≤ V marks real vocab
+    columns.  Returns (fused_nll [T], modal_nll [M, T]) plus, with
+    ``save_residuals``, (fused_max [T], fused_lse [T], modal_max [M, T],
+    modal_lse [M, T])."""
+    M = len(logits)
+    T = labels.shape[0]
+    V = logits[0].shape[-1]
     assert T % block_t == 0 and V % block_v == 0, (T, V, block_t, block_v)
     grid = (T // block_t, V // block_v)
 
-    kern = functools.partial(_kernel, n_mod=M, block_v=block_v)
+    row = lambda it, iv: (it,)                              # noqa: E731
+    mrow = lambda it, iv: (0, it)                           # noqa: E731
+    out_specs = [pl.BlockSpec((block_t,), row),
+                 pl.BlockSpec((M, block_t), mrow)]
+    out_shape = [jax.ShapeDtypeStruct((T,), jnp.float32),
+                 jax.ShapeDtypeStruct((M, T), jnp.float32)]
+    if save_residuals:
+        out_specs += [pl.BlockSpec((block_t,), row),
+                      pl.BlockSpec((block_t,), row),
+                      pl.BlockSpec((M, block_t), mrow),
+                      pl.BlockSpec((M, block_t), mrow)]
+        out_shape += [jax.ShapeDtypeStruct((T,), jnp.float32),
+                      jax.ShapeDtypeStruct((T,), jnp.float32),
+                      jax.ShapeDtypeStruct((M, T), jnp.float32),
+                      jax.ShapeDtypeStruct((M, T), jnp.float32)]
+
+    kern = functools.partial(_fwd_kernel, n_mod=M, block_v=block_v,
+                             v_real=v_real, save_residuals=save_residuals)
     return pl.pallas_call(
         kern,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_t,), lambda it, iv: (it,)),
-            pl.BlockSpec((M, block_t, block_v), lambda it, iv: (0, it, iv)),
-            pl.BlockSpec((M, block_t), lambda it, iv: (0, it)),
-        ],
-        out_specs=[
-            pl.BlockSpec((block_t,), lambda it, iv: (it,)),
-            pl.BlockSpec((M, block_t), lambda it, iv: (0, it)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((T,), jnp.float32),
-            jax.ShapeDtypeStruct((M, T), jnp.float32),
-        ],
+        in_specs=[pl.BlockSpec((block_t,), row),
+                  pl.BlockSpec((M, block_t), mrow)]
+                 + _logit_specs(seg, block_t, block_v),
+        out_specs=out_specs,
+        out_shape=out_shape,
         scratch_shapes=[
             pltpu.VMEM((block_t,), jnp.float32),       # mf
             pltpu.VMEM((block_t,), jnp.float32),       # sf
@@ -116,4 +206,117 @@ def fusion_loss_pallas(logits: jax.Array, labels: jax.Array,
             pltpu.VMEM((M, block_t), jnp.float32),     # gm
         ],
         interpret=interpret,
-    )(labels, logits, avail)
+    )(labels, avail, *logits)
+
+
+# ---------------------------------------------------------------------------
+# backward
+# ---------------------------------------------------------------------------
+def _bwd_kernel(labels_ref, avail_ref, df_ref, dm_ref, flse_ref, mlse_ref,
+                *refs, n_mod: int, block_v: int, v_real: int):
+    it = pl.program_id(0)
+    iv = pl.program_id(1)
+    ni = pl.num_programs(0)
+    nv = pl.num_programs(1)
+    logit_refs = refs[:n_mod]
+    dl_refs = refs[n_mod:2 * n_mod]
+    gsq_ref, gdot_ref = refs[2 * n_mod:2 * n_mod + 2]
+    sq_acc, dot_acc = refs[2 * n_mod + 2:]
+
+    @pl.when((it == 0) & (iv == 0))
+    def _init():
+        sq_acc[...] = jnp.zeros_like(sq_acc)
+        dot_acc[...] = jnp.zeros_like(dot_acc)
+
+    bt = labels_ref.shape[0]
+    logits = _load_stack(logit_refs, bt, block_v)           # [M, Tb, Vb]
+    avail = avail_ref[...].astype(jnp.float32)              # [M, Tb]
+    labels = labels_ref[...]
+    df = df_ref[...].astype(jnp.float32)                    # [Tb]
+    dm = dm_ref[...].astype(jnp.float32)                    # [M, Tb]
+    fused, denom = _fused_tile(logits, avail, iv, block_v, v_real)
+
+    # probabilities from the saved residuals, one tile at a time
+    p_f = jnp.exp(fused - flse_ref[...][:, None])           # [Tb, Vb]
+    p_m = jnp.exp(logits - mlse_ref[...][..., None])        # [M, Tb, Vb]
+    pick = _gold_pick(labels, iv, block_v).astype(jnp.float32)
+    base = df[:, None] * (p_f - pick)                       # [Tb, Vb]
+    d = ((avail / denom)[..., None] * base[None]
+         + (dm * avail)[..., None] * (p_m - pick[None]))    # [M, Tb, Vb]
+
+    for i, r in enumerate(dl_refs):
+        r[...] = d[i].astype(r.dtype)
+    sq_acc[...] = sq_acc[...] + (d * d).sum((1, 2))
+    dot_acc[...] = dot_acc[...] + (d * base[None]).sum((1, 2))
+
+    @pl.when((it == ni - 1) & (iv == nv - 1))
+    def _finalize():
+        gsq_ref[...] = sq_acc[...]
+        gdot_ref[...] = dot_acc[...]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "block_t", "block_v", "v_real", "seg", "interpret"))
+def fusion_loss_bwd_pallas(logits, labels, avail, d_fused, d_modal,
+                           fused_lse, modal_lse, *, block_t: int,
+                           block_v: int, v_real: int, seg,
+                           interpret: bool = False):
+    """One blocked pass emitting the logits gradient + ζ/δ partials.
+
+    Inputs mirror the forward (same variadic ``logits``/``seg`` layout) plus
+    the loss cotangents ``d_fused`` [T] / ``d_modal`` [M, T] and the saved
+    LSE residuals.  Returns (dlogits — one [T, V] f32 array per modality,
+    broadcast heads included; gsq [M] = Σ dx_m²; gdot [M] = Σ dx_m·g_fused).
+    """
+    M = len(logits)
+    T = labels.shape[0]
+    V = logits[0].shape[-1]
+    assert T % block_t == 0 and V % block_v == 0, (T, V, block_t, block_v)
+    grid = (T // block_t, V // block_v)
+
+    row = lambda it, iv: (it,)                              # noqa: E731
+    mrow = lambda it, iv: (0, it)                           # noqa: E731
+    acc = lambda it, iv: (0,)                               # noqa: E731
+    kern = functools.partial(_bwd_kernel, n_mod=M, block_v=block_v,
+                             v_real=v_real)
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_t,), row),
+                  pl.BlockSpec((M, block_t), mrow),
+                  pl.BlockSpec((block_t,), row),
+                  pl.BlockSpec((M, block_t), mrow),
+                  pl.BlockSpec((block_t,), row),
+                  pl.BlockSpec((M, block_t), mrow)]
+                 + _logit_specs(seg, block_t, block_v),
+        out_specs=[pl.BlockSpec((block_t, block_v),
+                                lambda it, iv: (it, iv))] * M
+                  + [pl.BlockSpec((M,), acc), pl.BlockSpec((M,), acc)],
+        out_shape=[jax.ShapeDtypeStruct((T, V), jnp.float32)] * M
+                  + [jax.ShapeDtypeStruct((M,), jnp.float32)] * 2,
+        scratch_shapes=[pltpu.VMEM((M,), jnp.float32),
+                        pltpu.VMEM((M,), jnp.float32)],
+        interpret=interpret,
+    )(labels, avail, d_fused, d_modal, fused_lse, modal_lse, *logits)
+    return tuple(out[:M]), out[M], out[M + 1]
+
+
+# ---------------------------------------------------------------------------
+# stacked-operand compatibility wrapper (forward only, shapes must tile)
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("block_t", "block_v", "interpret"))
+def fusion_loss_pallas(logits: jax.Array, labels: jax.Array,
+                       avail: jax.Array, *, block_t: int = 128,
+                       block_v: int = 2048, interpret: bool = False):
+    """logits [M,T,V], labels [T] int32, avail [M,T] -> (fused_nll [T],
+    modal_nll [M,T]), both f32.  For the differentiable, padding-aware entry
+    point use ``ops.fusion_loss``."""
+    M, T, V = logits.shape
+    block_t = min(block_t, T)
+    block_v = min(block_v, V)
+    assert T % block_t == 0 and V % block_v == 0, (T, V, block_t, block_v)
+    out = fusion_loss_fwd_pallas(
+        tuple(logits[i] for i in range(M)), labels, avail,
+        block_t=block_t, block_v=block_v, v_real=V, seg=(0,) * M,
+        save_residuals=False, interpret=interpret)
+    return out[0], out[1]
