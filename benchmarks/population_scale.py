@@ -47,34 +47,27 @@ from typing import List, Optional
 
 import numpy as np
 
-DATASET_SHAPES = {"iemocap": ({"audio": (32, 11), "text": (24, 100)}, 10),
-                  "crema_d": ({"audio": (32, 11), "image": (32, 32, 3)}, 6)}
 
 
 def build_population(K: int, n_per_client: int, dataset: str, params,
                      omega: float = 0.2, seed: int = 0):
     """Synthetic ClientStore with Eqs. 15-18 cost vectors, vectorized."""
+    # deferred: importing repro pulls in jax, which must not initialize
+    # before main() applies --virtual-devices to XLA_FLAGS
     from repro.data.partition import synthetic_population
+    from repro.data.scenarios import DATASET_SHAPES
+    from repro.wireless.cost import population_costs
     from repro.wireless.params import MODALITY_PROFILES
 
     shapes, n_classes = DATASET_SHAPES[dataset]
     store = synthetic_population(K, n_per_client, shapes, n_classes, omega,
                                  seed=seed)
-    prof = MODALITY_PROFILES[dataset]
-    has = {m: np.asarray(store.has_modality[m]) for m in store.modalities}
-    # Γ_k = Σ_{m∈M_k} l_m (Eq. 15);  Φ_k = Σ_{m∈M_k}(β_m + β₀) − β₀ (Eq. 17)
-    gam = sum(np.where(has[m], prof[m][0], 0.0) for m in store.modalities)
-    owned = sum(has[m].astype(np.int64) for m in store.modalities)
-    phi = (sum(np.where(has[m], prof[m][1] + params.beta0, 0.0)
-               for m in store.modalities)
-           - params.beta0 * (owned > 0))
-    D = np.asarray(store.sizes, np.float64)
-    tau_cmp = D * phi / params.f_cpu                                # Eq. 17
-    e_cmp = params.alpha * D * params.f_cpu ** 2 * phi              # Eq. 18
+    cost = population_costs(store.has_modality, store.modalities,
+                            store.sizes, MODALITY_PROFILES[dataset], params)
     return dataclasses.replace(store,
-                               gamma_bits=gam.astype(np.float32),
-                               tau_cmp=tau_cmp.astype(np.float32),
-                               e_cmp=e_cmp.astype(np.float32))
+                               gamma_bits=cost.gamma_bits.astype(np.float32),
+                               tau_cmp=cost.tau_cmp.astype(np.float32),
+                               e_cmp=cost.e_cmp.astype(np.float32))
 
 
 def _make_engine(K: int, J: int, dataset: str, policy_name: str,

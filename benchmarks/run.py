@@ -114,6 +114,29 @@ def bench_v_frontier(quick: bool):
                  f"curve_pts={len(r['curve']['round'])}")
 
 
+def bench_scenario_zoo(quick: bool):
+    """Scenario zoo: one sharded scan_scenario_grid over a grid mixing
+    split laws (iid / dirichlet-α / natural groups), per-modality ω_m
+    vectors and corruption models, each row evaluated on its own held-out
+    split inside the scan (see benchmarks/scenario_zoo.py)."""
+    from benchmarks.scenario_zoo import (check_curves, default_zoo, run_zoo,
+                                         tiny_zoo)
+    if TINY:
+        out = run_zoo(tiny_zoo(), rounds=4, eval_every=2)
+    elif quick:
+        out = run_zoo(default_zoo(K=8, n_per_client=4, n_test=64),
+                      rounds=12, eval_every=4)
+    else:
+        out = run_zoo(default_zoo(K=10, n_per_client=8, n_test=128))
+    check_curves(out)
+    PAYLOADS["scenario_zoo"] = out
+    for r in out["scenarios"]:
+        emit(f"scenario_zoo_{r['name']}", 0.0,
+             f"mm={r['multimodal']:.4f};E={r['energy_J']:.4f}J;"
+             f"part={r['mean_participants']};"
+             f"curve_pts={len(r['curve']['round'])}")
+
+
 def bench_solver_runtime(quick: bool):
     from repro.core.aggregation import unified_weights
     from repro.core.convergence import BoundState
@@ -327,6 +350,7 @@ def main() -> None:
     benches = {
         "table3": bench_table3,
         "v_frontier": bench_v_frontier,
+        "scenario_zoo": bench_scenario_zoo,
         "solver_runtime": bench_solver_runtime,
         "bound": bench_bound,
         "kernels": bench_kernels,

@@ -1,0 +1,219 @@
+"""Scenario zoo: one sharded ``scan_scenario_grid`` over a grid that mixes
+split laws, per-modality ω_m vectors and corruption models — the paper's
+modal-heterogeneity claims stress-tested beyond its Table 3.
+
+Every row of the grid is a frozen ``data.scenarios.ScenarioSpec`` (split:
+iid | dirichlet-α | natural-groups; per-modality missing ratios ω_m and
+SNRs; feature-noise / erasure / test-time-missing corruption; the Lyapunov V
+as just another field).  ``stack_scenarios`` vectorizes them into stacked
+``ClientStore``s + per-scenario solver-data rows, and ONE
+``jit(vmap(scan))`` — sharded over the local devices' ``("scenario",)``
+mesh when more than one is available — runs every scenario's whole R-round
+experiment with device-resident eval, so each row of the committed artifact
+carries an accuracy *curve* on its own held-out split.
+
+The default grid covers ω up to 0.6 at M=2 — the regime where the
+pre-fix partitioner crashed outright ("client lost every modality") — so
+the artifact doubles as regression evidence for the corrected substrate.
+
+``--check-parity`` reruns the grid on a single device and asserts the
+sharded sweep is bit-exact (the acceptance contract also locked by
+tests/test_scenarios.py).
+
+  PYTHONPATH=src python -m benchmarks.scenario_zoo \
+      --json-out BENCH_scenario_zoo.json                         # full
+  PYTHONPATH=src python -m benchmarks.scenario_zoo --tiny \
+      --check-parity --json-out BENCH_scenario_zoo.json          # CI smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+
+def default_zoo(K: int, n_per_client: int, n_test: int,
+                seed: int = 0) -> List:
+    """12 rows on iemocap (M=2: audio+text): split laws x ω_m vectors x
+    corruption x V."""
+    from repro.data.scenarios import ScenarioSpec
+
+    geom = dict(dataset="iemocap", K=K, n_per_client=n_per_client,
+                n_test=n_test)
+    rows = [
+        dict(name="iid", split="iid", omega=0.0),
+        dict(name="iid,om=0.3", split="iid", omega=0.3),
+        dict(name="iid,om=0.6", split="iid", omega=0.6),     # pre-fix crash
+        dict(name="iid,om=0.6/0.2", split="iid", omega=(0.6, 0.2)),
+        dict(name="dir01,om=0.3", split="dirichlet", alpha=0.1, omega=0.3),
+        dict(name="dir05,om=0.3", split="dirichlet", alpha=0.5, omega=0.3),
+        dict(name="nat,om=0.3", split="natural", alpha=0.5, n_groups=4,
+             omega=0.3),
+        dict(name="nat-sig2,om=0.3", split="natural", alpha=0.5, n_groups=4,
+             group_sigma=2.0, omega=0.3),
+        dict(name="iid,om=0.3,noise1", split="iid", omega=0.3,
+             noise_sigma=1.0),
+        dict(name="iid,om=0.3,erase03", split="iid", omega=0.3,
+             erasure_rate=0.3),
+        dict(name="iid,om=0.3,no-text", split="iid", omega=0.3,
+             test_missing="text"),
+        dict(name="iid,om=0.3,V=10", split="iid", omega=0.3, V=10.0),
+    ]
+    return [ScenarioSpec(seed=seed + i, **geom, **r)
+            for i, r in enumerate(rows)]
+
+
+def tiny_zoo(seed: int = 0) -> List:
+    """CI smoke: 2 split laws x 2 ω points x 2 corruption settings = 8."""
+    from repro.data.scenarios import ScenarioSpec
+
+    geom = dict(dataset="iemocap", K=6, n_per_client=4, n_test=32)
+    specs = []
+    i = 0
+    for split in ("iid", "dirichlet"):
+        for omega in (0.2, 0.6):
+            for noise in (0.0, 0.5):
+                specs.append(ScenarioSpec(
+                    split=split, alpha=0.3, omega=omega, noise_sigma=noise,
+                    seed=seed + i, **geom))
+                i += 1
+    return specs
+
+
+def run_zoo(specs: Sequence, rounds: int = 30, J: Optional[int] = None,
+            eval_every: int = 5, seed: int = 0, mesh="auto") -> dict:
+    import jax
+    from repro.data.scenarios import stack_scenarios
+    from repro.fl.client import PaperModelAdapter
+    from repro.fl.fused_round import FusedRoundEngine, draw_population_xs
+    from repro.wireless.channel import Channel
+    from repro.wireless.params import WirelessParams
+    from repro.wireless.policies import JCSBAPolicy
+
+    s0 = specs[0]
+    K = s0.K
+    params = WirelessParams(K=K, B_max=1e6 * K, E_add=2e-4)
+    grid = stack_scenarios(specs, params)
+    eng = FusedRoundEngine.from_store(
+        grid.store_row(0), params, JCSBAPolicy(K, max_cohort=J or K),
+        PaperModelAdapter(s0.dataset), seed=seed)
+    carry = eng.fresh_carry()
+    rng = np.random.default_rng(seed + 1)
+    xs = draw_population_xs(Channel(params, rng), rng, K, rounds,
+                            eval_every=eval_every, include_final=True)
+    test_sets = (grid.test_features, grid.test_labels)
+
+    carries, auxs = jax.block_until_ready(eng.scan_scenario_grid(
+        grid.overrides, carry, xs, stores=grid.stores,
+        test_sets=test_sets, mesh=mesh))
+    if _CHECK_PARITY:
+        single = jax.block_until_ready(eng.scan_scenario_grid(
+            grid.overrides, carry, xs, stores=grid.stores,
+            test_sets=test_sets, mesh=None))
+        mismatched = [
+            i for i, (a, b) in enumerate(zip(
+                jax.tree.leaves((carries, auxs)), jax.tree.leaves(single)))
+            if not np.array_equal(np.asarray(a), np.asarray(b),
+                                  equal_nan=True)]
+        assert not mismatched, \
+            f"sharded != single-device on leaves {mismatched}"
+        print("parity: sharded sweep bit-exact vs single device", flush=True)
+
+    ok = np.asarray(auxs.ok)                           # [S, R, K]
+    energy = np.asarray(carries.spent).sum(-1)         # [S]
+    emask = np.asarray(auxs.eval_mask)                 # [S, R]
+    metrics = {k: np.asarray(v) for k, v in auxs.metrics.items()}
+    out = {"benchmark": "scenario_zoo", "dataset": s0.dataset, "K": K,
+           "n_per_client": s0.n_per_client, "n_test": s0.n_test,
+           "rounds": rounds, "eval_every": eval_every, "seed": seed,
+           "devices": len(jax.devices()),
+           "regime": "one sharded scan_scenario_grid over stacked "
+                     "ScenarioSpecs (per-scenario ClientStore + solver-data "
+                     "rows + held-out split); JCSBA schedule; device-"
+                     "resident eval at the eval_every cadence, final round "
+                     "always included",
+           "scenarios": []}
+    for i, spec in enumerate(grid.specs):
+        pts = np.flatnonzero(emask[i])
+        curve = {"round": [int(t) for t in pts]}
+        for k, v in metrics.items():
+            curve[k] = [round(float(v[i, t]), 4) for t in pts]
+        final = {k: curve[k][-1] for k in metrics}
+        row = {"name": spec.label(), "split": spec.split,
+               "alpha": spec.alpha if spec.split != "iid" else None,
+               "omega": list(spec.omega), "snr": list(spec.snr),
+               "noise_sigma": spec.noise_sigma,
+               "erasure_rate": spec.erasure_rate,
+               "test_missing": spec.test_missing,
+               "V": spec.V, "seed": spec.seed,
+               "multimodal": final["multimodal"], "loss": final["loss"],
+               **{m: final[m] for m in spec.modalities},
+               "energy_J": round(float(energy[i]), 5),
+               "mean_participants": round(float(ok[i].sum(-1).mean()), 2),
+               "curve": curve}
+        out["scenarios"].append(row)
+        print(f"{row['name']:24s} mm={final['multimodal']:.4f} "
+              f"E={row['energy_J']:.4f}J part={row['mean_participants']} "
+              f"curve_pts={len(pts)}", flush=True)
+    return out
+
+
+def check_curves(out: dict) -> None:
+    """The same curve-bearing contract as the V-frontier artifact: strictly
+    increasing round axes, consistent track lengths, headline == last curve
+    point, ending at the final round."""
+    rows = out["scenarios"]
+    assert rows, "no scenarios in artifact"
+    for r in rows:
+        curve = r.get("curve")
+        assert curve and curve["round"], r["name"]
+        rnds = curve["round"]
+        assert all(b > a for a, b in zip(rnds, rnds[1:])), (r["name"], rnds)
+        assert rnds[-1] == out["rounds"] - 1, (r["name"], rnds)
+        for k, vals in curve.items():
+            assert len(vals) == len(rnds), (r["name"], k)
+        assert r["multimodal"] == curve["multimodal"][-1], r["name"]
+
+
+_CHECK_PARITY = False
+
+
+def main(argv: Optional[List[str]] = None) -> dict:
+    global _CHECK_PARITY
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: the 2x2x2 grid, K=6, 4 rounds")
+    ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--K", type=int, default=10)
+    ap.add_argument("--n-per-client", type=int, default=8)
+    ap.add_argument("--n-test", type=int, default=128)
+    ap.add_argument("--eval-every", type=int, default=None)
+    ap.add_argument("--check-parity", action="store_true",
+                    help="rerun on a single device and assert the sharded "
+                         "sweep is bit-exact")
+    ap.add_argument("--check-curves", action="store_true")
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args(argv)
+    _CHECK_PARITY = args.check_parity
+    if args.tiny:
+        specs = tiny_zoo()
+        out = run_zoo(specs, rounds=args.rounds or 4,
+                      eval_every=args.eval_every or 2)
+    else:
+        specs = default_zoo(args.K, args.n_per_client, args.n_test)
+        out = run_zoo(specs, rounds=args.rounds or 30,
+                      eval_every=args.eval_every or 5)
+    if args.check_curves:
+        check_curves(out)
+        print("curve check OK")
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(out, f, indent=2)
+        print(f"wrote {args.json_out}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

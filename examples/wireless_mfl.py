@@ -19,6 +19,10 @@ def main():
     ap.add_argument("--dataset", default="crema_d")
     ap.add_argument("--n-samples", type=int, default=800)
     ap.add_argument("--baseline", default="random")
+    ap.add_argument("--dirichlet-alpha", type=float, default=0.0,
+                    help="label-skew Dirichlet concentration (0 = IID "
+                         "equal shards, the paper's setting; smaller = "
+                         "stronger non-IID)")
     ap.add_argument("--engine", default="batched",
                     help="round engine spec '<loop>[:<backend>]': loop is "
                          "seq (per-client reference), batched (default, one "
@@ -39,6 +43,7 @@ def main():
         print(f"=== {algo}{' (fused)' if fused else ''} ===")
         exp = MFLExperiment(dataset=args.dataset, scheduler=algo,
                             n_samples=args.n_samples, seed=0,
+                            dirichlet_alpha=args.dirichlet_alpha,
                             eval_every=eval_every, engine=args.engine)
         if fused:
             # one scan for the whole run: the device-resident eval samples

@@ -2,9 +2,26 @@
 
 The paper quantifies modality heterogeneity by a missing-modality ratio ω:
 ω_m = 0.3 means 30% of clients lack modality m.  We split the dataset into K
-equal-ish client shards and remove each modality from a disjoint ⌊ωK⌋-sized
-client subset (disjoint so every client keeps at least one modality, matching
+equal-ish client shards and remove each modality from a ⌊ω_m·K⌋-sized client
+subset chosen so that every client keeps at least one modality (matching
 Fig. 1 where client 1 lacks image but keeps audio).
+
+Construction (``missing_counts`` / ``missing_masks``, shared by ``partition``
+and ``synthetic_population``): lay the per-modality missing windows end to
+end around one random permutation of the K clients, wrapping modulo K.  Each
+window has length n_m = ⌊ω_m·K⌋ ≤ K-1, so no modality is removed from the
+same client twice, and as long as the total Σ_m n_m ≤ K·(M-1) no client can
+collect marks from all M modalities (max per-client load is ⌈Σn_m / K⌉).
+When Σ_m n_m exceeds that capacity — e.g. M=2, ω=0.6, where exact targets
+are combinatorially impossible under keep-≥1 — the targets are shaved
+largest-first (water-fill) down to capacity instead of silently overlapping;
+``missing_counts`` exposes the realized counts.  Genuinely infeasible specs
+(ω_m ≥ 1, which would strip a modality of every owner, or removing the only
+modality when M=1) raise ``ValueError``.
+
+For Σ_m n_m ≤ K the windows never wrap and this reproduces the historical
+disjoint-block assignment bit-for-bit (same rng stream); seeds only differ
+in the previously-broken ω > 1/M regime.
 """
 from __future__ import annotations
 
@@ -165,36 +182,117 @@ def build_client_store(stacked: StackedClients, gamma_bits, tau_cmp,
         tuple(stacked.modalities))
 
 
+# ---------------------------------------------------------------------------
+# Missing-modality assignment (shared by partition / synthetic_population)
+# ---------------------------------------------------------------------------
+def normalize_omegas(omega, modalities: Sequence[str]) -> Tuple[float, ...]:
+    """Broadcast a scalar ω / per-modality mapping / sequence to one ω_m per
+    modality, in ``sorted(modalities)`` order."""
+    mods = tuple(sorted(modalities))
+    if isinstance(omega, Mapping):
+        unknown = set(omega) - set(mods)
+        if unknown:
+            raise ValueError(f"omega names unknown modalities {sorted(unknown)}")
+        return tuple(float(omega.get(m, 0.0)) for m in mods)
+    if np.ndim(omega) == 0:
+        return (float(omega),) * len(mods)
+    omegas = tuple(float(w) for w in omega)
+    if len(omegas) != len(mods):
+        raise ValueError(
+            f"got {len(omegas)} omega values for {len(mods)} modalities")
+    return omegas
+
+
+def missing_counts(K: int, omegas: Sequence[float]) -> np.ndarray:
+    """Realized per-modality missing-set sizes.
+
+    Targets are ⌊ω_m·K⌋.  Keeping every client ≥1 modality bounds the total
+    at K·(M-1) (each client absorbs at most M-1 marks); oversubscribed
+    targets are shaved largest-first (water-fill) to that capacity, ties
+    broken toward lower modality index.  Raises ``ValueError`` for ω_m
+    outside [0, 1) or when removal is infeasible outright (M = 1)."""
+    omegas = np.asarray(omegas, float)
+    M = omegas.size
+    if np.any((omegas < 0.0) | (omegas >= 1.0)):
+        raise ValueError(
+            f"omega must lie in [0, 1) per modality (got {omegas.tolist()}): "
+            "omega_m >= 1 strips modality m from every client")
+    counts = np.floor(omegas * K).astype(int)
+    cap = K * (M - 1)
+    if counts.sum() > cap and cap == 0:
+        raise ValueError(
+            "cannot remove the only modality: with M=1 any omega*M >= 1/K "
+            "leaves clients with zero modalities")
+    if counts.sum() <= cap:
+        return counts
+    # water-fill: largest level t with sum(min(counts, t)) <= cap, then hand
+    # the remainder to the largest-target modalities (stable tie-break)
+    lo, hi = 0, int(counts.max())
+    while lo < hi:
+        mid = (lo + hi + 1) // 2
+        if int(np.minimum(counts, mid).sum()) <= cap:
+            lo = mid
+        else:
+            hi = mid - 1
+    out = np.minimum(counts, lo)
+    eligible = np.flatnonzero(counts > out)
+    order = eligible[np.argsort(-counts[eligible], kind="stable")]
+    out[order[:cap - int(out.sum())]] += 1
+    return out
+
+
+def missing_masks(K: int, omegas: Sequence[float], rng) -> np.ndarray:
+    """Bool [M, K]: ``mask[m, k]`` ⇔ client k is missing modality m.
+
+    One permutation of the clients, per-modality windows of ``missing_counts``
+    lengths laid end to end modulo K — every client keeps ≥1 modality and
+    no modality loses every owner (n_m ≤ K-1)."""
+    counts = missing_counts(K, omegas)
+    order = rng.permutation(K)
+    miss = np.zeros((counts.size, K), bool)
+    c = 0
+    for m, n in enumerate(counts):
+        miss[m, order[(c + np.arange(n)) % K]] = True
+        c += int(n)
+    assert not miss.all(axis=0).any(), "internal: client lost every modality"
+    return miss
+
+
 def synthetic_population(K: int, n_per_client: int,
                          feature_shapes: Mapping[str, Sequence[int]],
-                         n_classes: int, omega: float,
-                         seed: int = 0) -> ClientStore:
+                         n_classes: int, omega,
+                         seed: int = 0, snr=1.0) -> ClientStore:
     """Vectorized population builder for O(10⁴–10⁶) clients.
 
     ``partition``/``stack_clients`` loop per client in Python — fine at
     K≈50, prohibitive at K=100k.  This builds the same modality-
-    heterogeneity structure (disjoint ⌊ωK⌋-sized missing sets per modality,
-    every client keeps ≥1 modality) with pure array ops.  Cost vectors are
-    returned as zeros; callers fill them via ``dataclasses.replace`` (see
-    benchmarks/population_scale.py, which vectorizes Eqs. 15-18)."""
+    heterogeneity structure (``missing_masks``: ⌊ω_m·K⌋-sized missing sets,
+    every client keeps ≥1 modality, every modality keeps ≥1 owner) with pure
+    array ops.  ``omega`` and ``snr`` broadcast like in ``partition``: a
+    scalar, a per-modality mapping, or a sequence in sorted-modality order.
+
+    Features are class-conditional — per-class prototype × snr_m plus unit
+    noise, the same separable structure as data/synthetic.py — so
+    population-scale eval is learnable rather than chance-level.  Cost
+    vectors are returned as zeros; callers fill them via
+    ``dataclasses.replace`` (see ``wireless.cost.population_costs``)."""
     rng = np.random.default_rng(seed)
     mods = tuple(sorted(feature_shapes))
-    n_missing = int(np.floor(omega * K))
-    has: Dict[str, np.ndarray] = {}
-    order = rng.permutation(K)
-    c = 0
-    for m in mods:                       # disjoint blocks, like partition()
-        miss = np.zeros(K, bool)
-        miss[order[c:c + n_missing]] = True
-        has[m] = ~miss
-        c += n_missing
-        if c + n_missing > K:
-            c = 0
-    feats = {m: rng.standard_normal((K, n_per_client) + tuple(s),
-                                    np.float32) * has[m].reshape(
-                 (K,) + (1,) * (len(s) + 1))
-             for m, s in feature_shapes.items()}
+    omegas = normalize_omegas(omega, mods)
+    snrs = normalize_omegas(snr, mods)      # same broadcast rules, no bound
+    miss = missing_masks(K, omegas, rng)
+    has = {m: ~miss[i] for i, m in enumerate(mods)}
+    for m in mods:
+        assert has[m].any(), f"no client owns modality {m!r}"
     labels = rng.integers(0, n_classes, (K, n_per_client)).astype(np.int32)
+    feats: Dict[str, np.ndarray] = {}
+    for i, m in enumerate(mods):
+        shape = tuple(feature_shapes[m])
+        protos = rng.standard_normal((n_classes,) + shape).astype(np.float32)
+        noise = rng.standard_normal(
+            (K, n_per_client) + shape).astype(np.float32)
+        own = has[m].reshape((K,) + (1,) * (len(shape) + 1))
+        feats[m] = (protos[labels] * np.float32(snrs[i]) + noise) * own
     zeros = np.zeros(K, np.float32)
     return ClientStore(feats, labels, np.ones((K, n_per_client), np.float32),
                        has, np.full(K, float(n_per_client), np.float32),
@@ -214,19 +312,28 @@ def _dirichlet_shards(ds: MultimodalDataset, K: int, alpha: float,
         cuts = (np.cumsum(p) * len(idx_c)).astype(int)[:-1]
         for k, part in enumerate(np.split(idx_c, cuts)):
             shards[k].extend(part.tolist())
-    # rebalance BEFORE materialising so donated samples move, not duplicate
+    # rebalance BEFORE materialising so donated samples move, not duplicate.
+    # Donors must keep >= 1 sample themselves, or a large-K / small-N split
+    # can pop a shard straight back to empty (the shard it just filled, even).
     for k in range(K):
         if not shards[k]:                     # guarantee non-empty clients
-            donor = int(np.argmax([len(x) for x in shards]))
+            sizes = [len(x) for x in shards]
+            donor = int(np.argmax(sizes))
+            if sizes[donor] < 2:
+                raise ValueError(
+                    f"cannot rebalance Dirichlet shards: only {len(ds)} "
+                    f"samples for K={K} clients")
             shards[k].append(shards[donor].pop())
     return [np.asarray(s, int) for s in shards]
 
 
-def partition(ds: MultimodalDataset, K: int, omega: float,
+def partition(ds: MultimodalDataset, K: int, omega,
               seed: int = 0,
               dirichlet_alpha: float = 0.0) -> List[ClientData]:
     """``dirichlet_alpha > 0`` adds label skew on top of the modality
-    heterogeneity (0 = IID equal shards, the paper's §VI setting)."""
+    heterogeneity (0 = IID equal shards, the paper's §VI setting).
+    ``omega`` is a scalar ratio, a per-modality mapping, or a sequence in
+    sorted-modality order (see ``normalize_omegas``/``missing_masks``)."""
     rng = np.random.default_rng(seed)
     if dirichlet_alpha > 0:
         shards = _dirichlet_shards(ds, K, dirichlet_alpha, rng)
@@ -234,17 +341,9 @@ def partition(ds: MultimodalDataset, K: int, omega: float,
         idx = rng.permutation(len(ds))
         shards = np.array_split(idx, K)
     all_mods = sorted(ds.features.keys())
-    n_missing = int(np.floor(omega * K))
-
-    # disjoint missing sets per modality
-    order = rng.permutation(K)
-    missing: Dict[str, set] = {}
-    c = 0
-    for m in all_mods:
-        missing[m] = set(order[c:c + n_missing])
-        c += n_missing
-        if c + n_missing > K:                       # wrap around if ω large
-            c = 0
+    miss = missing_masks(K, normalize_omegas(omega, all_mods), rng)
+    missing: Dict[str, set] = {
+        m: set(np.flatnonzero(miss[i])) for i, m in enumerate(all_mods)}
 
     clients = []
     for k in range(K):

@@ -183,6 +183,30 @@ def draw_round_xs(exp, rounds: int, eval_every: Optional[int] = None,
                    jnp.asarray(flags))
 
 
+def draw_population_xs(channel, rng, K: int, rounds: int,
+                       eval_every: int = 0,
+                       include_final: bool = False) -> RoundXs:
+    """``draw_round_xs`` for ``from_store`` engines (no ``MFLExperiment``):
+    one host-loop round of randomness per scanned round — K channel draws,
+    one policy seed, K client seeds — from an explicit ``Channel`` + numpy
+    generator.  ``eval_every <= 0`` disables the eval cadence entirely
+    (``include_final`` can still flag the last round, the scenario-zoo
+    convention so every curve ends with the final model's metrics)."""
+    h = np.empty((rounds, K), np.float32)
+    draw = np.empty(rounds, np.uint32)
+    cseed = np.empty((rounds, K), np.uint32)
+    flags = np.zeros(rounds, bool)
+    for t in range(rounds):
+        h[t] = channel.draw()
+        draw[t] = rng.integers(2 ** 31)
+        cseed[t] = rng.integers(2 ** 31, size=K, dtype=np.uint32)
+        flags[t] = eval_every > 0 and t % eval_every == 0
+    if include_final and rounds:
+        flags[-1] = True
+    return RoundXs(jnp.asarray(h), jnp.asarray(draw), jnp.asarray(cseed),
+                   jnp.asarray(flags))
+
+
 def _gather_rows(x, idx, axis_name: str):
     """Cross-shard cohort gather under a client-sharded mesh.
 
@@ -246,11 +270,15 @@ class FusedRoundEngine:
         # the ζ²/δ² snapshot are overwritten from the carry every round
         tmpl = build_solver_data(np.zeros(self.K), np.zeros(self.K),
                                  exp.cost, exp.params, exp.bound, self.V)
+        # tau_cmp rides in the template (not a baked engine static) so
+        # scenario grids can override it per scenario like every other
+        # per-client cost vector
+        tmpl["tau_cmp"] = np.asarray(exp.cost.tau_cmp, np.float64)
         self._solver_tmpl = to_device(tmpl)
         self._has = self._solver_tmpl["has"]            # [M, K] bool
         self._D = self._solver_tmpl["D"]                # [K] f32
-        self._tau_cmp = jnp.asarray(exp.cost.tau_cmp, jnp.float32)
-        self._e_cmp = jnp.asarray(exp.cost.e_cmp, jnp.float32)
+        self._tau_cmp = self._solver_tmpl["tau_cmp"]
+        self._e_cmp = self._solver_tmpl["e_cmp"]
         p = exp.params
         self._tau_max = float(p.tau_max)
         self._E_add = float(p.E_add)
@@ -299,6 +327,7 @@ class FusedRoundEngine:
             "gamma": np.asarray(store.gamma_bits, np.float64),
             "h": np.zeros(self.K),
             "tau_rem": params.tau_max - np.asarray(store.tau_cmp, np.float64),
+            "tau_cmp": np.asarray(store.tau_cmp, np.float64),
             "e_cmp": np.asarray(store.e_cmp, np.float64),
             "B_max": float(params.B_max),
             "p_tx": float(params.p_tx),
@@ -313,8 +342,8 @@ class FusedRoundEngine:
         self._solver_tmpl = to_device(tmpl)
         self._has = self._solver_tmpl["has"]
         self._D = self._solver_tmpl["D"]
-        self._tau_cmp = jnp.asarray(store.tau_cmp, jnp.float32)
-        self._e_cmp = jnp.asarray(store.e_cmp, jnp.float32)
+        self._tau_cmp = self._solver_tmpl["tau_cmp"]
+        self._e_cmp = self._solver_tmpl["e_cmp"]
         self._tau_max = float(params.tau_max)
         self._E_add = float(params.E_add)
         self._p_tx = float(params.p_tx)
@@ -340,9 +369,7 @@ class FusedRoundEngine:
                            enumerate(getattr(self.policy, "drop_mods", ()))}
         self._jit_step = jax.jit(self._round_step)
         self._jit_scan = jax.jit(self._scan_steps)
-        self._jit_vsweep = jax.jit(jax.vmap(self._scan_one_v,
-                                            in_axes=(0, None, None, None)))
-        self._sharded_vsweep_cache = {}     # mesh -> jitted shard_map sweep
+        self._sharded_vsweep_cache = {}     # cache key -> jitted sweep
 
     # ------------------------------------------------------------------
     # host state ↔ carry
@@ -393,12 +420,20 @@ class FusedRoundEngine:
     # the fused program
     # ------------------------------------------------------------------
     def _round_step(self, carry: FusedCarry, xs: RoundXs, store,
-                    overrides=None, axis_name: Optional[str] = None):
+                    overrides=None, test_set=None,
+                    axis_name: Optional[str] = None):
         """One round.  ``store`` is the (possibly shard-local)
         ``ClientStore``; ``axis_name`` names the mesh axis the store and the
         per-client xs leaves are sharded over (None = single device /
         replicated).  Cohort compute is replicated across the client axis —
-        only the O(K·N·d) store and the O(R·K) randomness shard."""
+        only the O(K·N·d) store and the O(R·K) randomness shard.
+
+        ``overrides`` replaces solver-template entries for this round (a
+        vmapped V — or, for scenario grids, any per-scenario context:
+        gamma/tau_rem/tau_cmp/e_cmp/has/D/wbar...); ``test_set`` is an
+        optional ``(features, labels)`` pair replacing the engine's static
+        held-out split, so scenario grids evaluate each scenario on its own
+        test data."""
         self.trace_count += 1
 
         # 0. under a client-sharded mesh the *vector* physics stays dense +
@@ -435,7 +470,7 @@ class FusedRoundEngine:
         # is spent, nothing is uploaded
         r = rate(jnp.maximum(B, B_LO), h, self._p_tx, self._N0)
         tcom = jnp.where(a, data["gamma"] / jnp.maximum(r, 1e-30), 0.0)
-        ok = a & (tcom + self._tau_cmp <= self._tau_max + 1e-12)
+        ok = a & (tcom + data["tau_cmp"] <= self._tau_max + 1e-12)
 
         # 3. cohort gather + masked BGD updates (Eq. 7) on the [J] stack.
         # The policy's index vector lists scheduled clients first (ascending)
@@ -489,12 +524,12 @@ class FusedRoundEngine:
         for i, m in enumerate(self.mods):
             z_m, d_m = tracker_update_gram(
                 carry.zeta[i], carry.delta[i], grad_gram(grads_c[m]),
-                w_c[m], upload_c[m], idx, self._has[i], self.staleness)
+                w_c[m], upload_c[m], idx, data["has"][i], self.staleness)
             zs.append(z_m)
             ds.append(d_m)
 
         # 5. Lyapunov queue recursion (§V-A) + energy accounting
-        used = a.astype(jnp.float32) * (self._p_tx * tcom + self._e_cmp)
+        used = a.astype(jnp.float32) * (self._p_tx * tcom + data["e_cmp"])
         Qn = queue_update(carry.Q, used, self._E_add)
         spent = carry.spent + used
 
@@ -508,10 +543,12 @@ class FusedRoundEngine:
         # 7. device-resident eval of the fresh globals on the held-out split
         # (the host loop's adapter.evaluate, fused behind the cadence flag —
         # only the branch that actually runs costs anything at runtime)
+        tf, tl = test_set if test_set is not None else \
+            (self._test_feats, self._test_labels)
         metrics = lax.cond(
             xs.eval_flag,
-            lambda p: eval_metrics(p, self._test_feats, self._test_labels),
-            lambda p: nan_metrics(self._test_feats),
+            lambda p: eval_metrics(p, tf, tl),
+            lambda p: nan_metrics(tf),
             new_params)
 
         new_carry = FusedCarry(new_params, pstate, Qn, spent,
@@ -535,10 +572,97 @@ class FusedRoundEngine:
 
     def _scan_one_v(self, V, carry: FusedCarry, xs: RoundXs, store,
                     axis_name: Optional[str] = None):
+        return self._scan_one_scenario({"V": V}, store, None, carry, xs,
+                                       axis_name=axis_name)
+
+    def _scan_one_scenario(self, overrides, store, test_set,
+                           carry: FusedCarry, xs: RoundXs,
+                           axis_name: Optional[str] = None):
+        """One scenario's whole experiment: R rounds under ``lax.scan`` with
+        this scenario's solver-data overrides / store / test split.  The unit
+        ``scan_scenario_grid`` vmaps and shards."""
         def body(c, x):
-            return self._round_step(c, x, store, overrides={"V": V},
-                                    axis_name=axis_name)
+            return self._round_step(c, x, store, overrides=overrides,
+                                    test_set=test_set, axis_name=axis_name)
         return lax.scan(body, carry, xs)
+
+    def scan_scenario_grid(self, overrides, carry: FusedCarry, xs: RoundXs,
+                           stores=None, test_sets=None, mesh="auto"):
+        """Whole experiments over an arbitrary *scenario* grid — the
+        generalization of ``scan_v_grid`` from a V-line to a zoo.
+
+        ``overrides`` is a dict of stacked solver-data entries, every value
+        carrying a leading [S] scenario axis over the per-round shapes
+        (``V`` → [S], ``gamma``/``tau_rem``/``tau_cmp``/``e_cmp``/``D`` →
+        [S, K], ``has``/``wbar`` → [S, M, K]); each scenario's row replaces
+        the engine's solver template for its entire experiment
+        (``data/scenarios.py::stack_scenarios`` assembles exactly this dict
+        from ``ScenarioSpec``s).  ``stores`` optionally stacks per-scenario
+        ``ClientStore``s ([S]-leading leaves — scenarios must share K, N and
+        the modality set; None = every scenario reads the engine's resident
+        store) and ``test_sets`` an ``(features, labels)`` pair with
+        [S]-leading leaves for per-scenario eval.  All scenarios share the
+        initial carry and the per-round randomness ``xs`` — the controlled-
+        comparison convention ``scan_v_grid`` established.
+
+        Runs as one ``jit(vmap(scan))``; on a multi-device 1-D
+        ``("scenario",)`` mesh the scenario axis (grid rows, stores, test
+        sets alike) shards over devices via ``shard_map`` — bit-exact vs the
+        single-device vmap (tests/test_scenarios.py).  The 2-D
+        ``("scenario", "clients")`` population mesh is V-grid-only: a
+        client-sharded store cannot also carry a scenario axis — use
+        ``scan_v_grid`` there."""
+        ovr = to_device(dict(overrides))
+        n_S = next(iter(ovr.values())).shape[0]
+        for k, v in ovr.items():
+            if v.shape[0] != n_S:
+                raise ValueError(
+                    f"override {k!r} has scenario axis {v.shape[0]}, "
+                    f"expected {n_S}")
+        store_arg = self._store if stores is None else \
+            jax.tree.map(jnp.asarray, stores)
+        ts_arg = None if test_sets is None else \
+            jax.tree.map(jnp.asarray, test_sets)
+        if mesh == "auto":
+            mesh = make_sweep_mesh()
+        key = ("scenario", None if mesh is None else mesh,
+               tuple(sorted(ovr)), stores is None, test_sets is None)
+        if mesh is None or mesh.devices.size <= 1:
+            fn = self._sharded_vsweep_cache.get(key)
+            if fn is None:
+                fn = jax.jit(jax.vmap(
+                    self._scan_one_scenario,
+                    in_axes=(0, None if stores is None else 0,
+                             None if test_sets is None else 0, None, None)))
+                self._sharded_vsweep_cache[key] = fn
+            return fn(ovr, store_arg, ts_arg, carry, xs)
+        if "clients" in mesh.axis_names:
+            raise ValueError(
+                "scan_scenario_grid supports 1-D ('scenario',) meshes only; "
+                "the 2-D ('scenario', 'clients') population mesh shards the "
+                "client store itself — run V-only grids there via "
+                "scan_v_grid")
+        n_dev = mesh.devices.size
+        ovr = pad_leading_axis(ovr, n_dev)
+        sharded = [0]
+        if stores is not None:
+            store_arg = pad_leading_axis(store_arg, n_dev)
+            sharded.append(1)
+        if test_sets is not None:
+            ts_arg = pad_leading_axis(ts_arg, n_dev)
+            sharded.append(2)
+        fn = self._sharded_vsweep_cache.get(key)
+        if fn is None:
+            vm = jax.vmap(
+                self._scan_one_scenario,
+                in_axes=(0, None if stores is None else 0,
+                         None if test_sets is None else 0, None, None))
+            fn = jax.jit(scenario_shard_map(vm, mesh, n_args=5,
+                                            sharded_args=tuple(sharded)))
+            self._sharded_vsweep_cache[key] = fn
+        carries, auxs = fn(ovr, store_arg, ts_arg, carry, xs)
+        return (slice_leading_axis(carries, n_S),
+                slice_leading_axis(auxs, n_S))
 
     def scan_v_grid(self, V_grid, carry: FusedCarry, xs: RoundXs,
                     mesh="auto"):
@@ -566,42 +690,35 @@ class FusedRoundEngine:
         V = jnp.asarray(V_grid, jnp.float32)
         if mesh == "auto":
             mesh = make_sweep_mesh()
-        if mesh is None or mesh.devices.size <= 1:
-            return self._jit_vsweep(V, carry, xs, self._store)
+        if mesh is None or mesh.devices.size <= 1 or \
+                "clients" not in mesh.axis_names:
+            # V is just the simplest scenario grid — one overridden solver
+            # entry, engine store and test split shared by every row
+            return self.scan_scenario_grid({"V": V}, carry, xs, mesh=mesh)
         n_V = V.shape[0]
-        if "clients" in mesh.axis_names:
-            n_cl = int(mesh.shape["clients"])
-            if self.K % n_cl:
-                raise ValueError(
-                    f"K={self.K} must divide the mesh's clients axis "
-                    f"({n_cl} shards)")
-            Vp = pad_leading_axis(V, int(mesh.shape["scenario"]))
-            fn = self._sharded_vsweep_cache.get(mesh)
-            if fn is None:
-                vm = jax.vmap(
-                    functools.partial(self._scan_one_v, axis_name="clients"),
-                    in_axes=(0, None, None, None))
-                xs_spec = RoundXs(
-                    h=logical_pspec(("rounds", "clients"), mesh),
-                    draw_seed=logical_pspec(("rounds",), mesh),
-                    client_seeds=logical_pspec(("rounds", "clients"), mesh),
-                    eval_flag=logical_pspec(("rounds",), mesh))
-                fn = jax.jit(population_shard_map(
-                    vm, mesh,
-                    in_specs=(logical_pspec(("scenario",), mesh), P(),
-                              xs_spec, logical_pspec(("clients",), mesh)),
-                    out_specs=logical_pspec(("scenario",), mesh)))
-                self._sharded_vsweep_cache[mesh] = fn
-            carries, auxs = fn(Vp, carry, xs, self._store)
-        else:
-            Vp = pad_leading_axis(V, mesh.devices.size)
-            fn = self._sharded_vsweep_cache.get(mesh)
-            if fn is None:
-                vm = jax.vmap(self._scan_one_v, in_axes=(0, None, None, None))
-                fn = jax.jit(scenario_shard_map(vm, mesh, n_args=4,
-                                                sharded_args=(0,)))
-                self._sharded_vsweep_cache[mesh] = fn
-            carries, auxs = fn(Vp, carry, xs, self._store)
+        n_cl = int(mesh.shape["clients"])
+        if self.K % n_cl:
+            raise ValueError(
+                f"K={self.K} must divide the mesh's clients axis "
+                f"({n_cl} shards)")
+        Vp = pad_leading_axis(V, int(mesh.shape["scenario"]))
+        fn = self._sharded_vsweep_cache.get(mesh)
+        if fn is None:
+            vm = jax.vmap(
+                functools.partial(self._scan_one_v, axis_name="clients"),
+                in_axes=(0, None, None, None))
+            xs_spec = RoundXs(
+                h=logical_pspec(("rounds", "clients"), mesh),
+                draw_seed=logical_pspec(("rounds",), mesh),
+                client_seeds=logical_pspec(("rounds", "clients"), mesh),
+                eval_flag=logical_pspec(("rounds",), mesh))
+            fn = jax.jit(population_shard_map(
+                vm, mesh,
+                in_specs=(logical_pspec(("scenario",), mesh), P(),
+                          xs_spec, logical_pspec(("clients",), mesh)),
+                out_specs=logical_pspec(("scenario",), mesh)))
+            self._sharded_vsweep_cache[mesh] = fn
+        carries, auxs = fn(Vp, carry, xs, self._store)
         return (slice_leading_axis(carries, n_V),
                 slice_leading_axis(auxs, n_V))
 

@@ -160,6 +160,7 @@ def _resolve_engine(engine: str, batched, solver, fused) -> str:
 class MFLExperiment:
     def __init__(self, dataset: str = "crema_d", scheduler: str = "jcsba",
                  K: int = 10, omega: float = 0.3, n_samples: int = 1200,
+                 dirichlet_alpha: float = 0.0,
                  eta: float = 0.05, V: float = 1.0, seed: int = 0,
                  params: Optional[WirelessParams] = None,
                  scheduler_kwargs: Optional[dict] = None,
@@ -197,7 +198,8 @@ class MFLExperiment:
 
         full = synthetic.DATASETS[dataset](seed=seed, n=n_samples)
         self.train_ds, self.test_ds = train_test_split(full, 0.2, seed)
-        self.clients = partition(self.train_ds, K, omega, seed)
+        self.clients = partition(self.train_ds, K, omega, seed,
+                                 dirichlet_alpha=dirichlet_alpha)
         self.all_mods = sorted(full.features.keys())
         self.client_mods = [c.modalities for c in self.clients]
         self.data_sizes = [c.size for c in self.clients]

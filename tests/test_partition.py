@@ -1,0 +1,221 @@
+"""Property suite for the corrected missing-modality partitioner.
+
+Locks the PR-8 substrate contract: for any feasible per-modality ω_m the
+missing sets keep every client ≥1 modality and every modality ≥1 owner;
+realized sizes equal ⌊ω_m·K⌋ whenever the keep-≥1 capacity allows and the
+documented water-fill shave otherwise; genuinely infeasible specs raise
+``ValueError`` instead of silently wrapping (the old cursor wrap made
+per-modality missing sets overlap for ω > 1/M — ``partition`` crashed on
+ω=0.6, M=2 and ``synthetic_population`` emitted zero-modality clients).
+"""
+import numpy as np
+import pytest
+
+from repro.data.partition import (missing_counts, missing_masks,
+                                  normalize_omegas, partition,
+                                  stack_clients, synthetic_population)
+from repro.data.synthetic import DATASETS
+
+
+def _mask_stack(store):
+    return np.stack([np.asarray(store.has_modality[m])
+                     for m in store.modalities])
+
+
+# ---------------------------------------------------------------------------
+# the exact pre-fix failure
+# ---------------------------------------------------------------------------
+def test_regression_omega_06_two_modalities():
+    """ω=0.6, M=2: the old wrap-around overlap tripped partition's
+    "client lost every modality" assert and left synthetic_population with
+    dead clients.  Both must now run clean."""
+    ds = DATASETS["iemocap"](seed=0, n=60)
+    clients = partition(ds, 10, 0.6, seed=0)
+    assert all(len(c.modalities) >= 1 for c in clients)
+    store = synthetic_population(10, 4, {"audio": (4,), "text": (3,)}, 4,
+                                 0.6, seed=0)
+    has = _mask_stack(store)
+    assert has.any(axis=0).all(), "client with zero modalities"
+    assert has.any(axis=1).all(), "modality with zero owners"
+
+
+# ---------------------------------------------------------------------------
+# realized counts
+# ---------------------------------------------------------------------------
+def test_missing_counts_exact_in_feasible_regime():
+    for K in (7, 10, 24):
+        for om in ([0.0, 0.0], [0.3, 0.3], [0.1, 0.4], [0.2, 0.2, 0.2]):
+            counts = missing_counts(K, om)
+            assert counts.tolist() == [int(np.floor(w * K)) for w in om]
+
+
+def test_missing_counts_water_fill_shave():
+    # capacity K(M-1): oversubscribed targets shave largest-first
+    assert missing_counts(10, [0.6, 0.6]).tolist() == [5, 5]
+    assert missing_counts(10, [0.9, 0.9, 0.9]).tolist() == [7, 7, 6]
+    # asymmetric: the small target is preserved, the big one pays
+    assert missing_counts(10, [0.9, 0.3]).tolist() == [7, 3]
+    # total never exceeds capacity, per-modality never exceeds its target
+    for om in ([0.8, 0.8], [0.9, 0.5, 0.7]):
+        c = missing_counts(10, om)
+        assert c.sum() <= 10 * (len(om) - 1)
+        assert (c <= np.floor(np.asarray(om) * 10)).all()
+
+
+def test_missing_counts_infeasible_raises():
+    with pytest.raises(ValueError):
+        missing_counts(10, [1.0, 0.2])          # ω_m = 1: modality unowned
+    with pytest.raises(ValueError):
+        missing_counts(10, [-0.1, 0.2])
+    with pytest.raises(ValueError):
+        missing_counts(10, [0.5])               # M = 1: only modality
+
+
+def test_normalize_omegas_broadcasts():
+    mods = ("audio", "text")
+    assert normalize_omegas(0.3, mods) == (0.3, 0.3)
+    assert normalize_omegas([0.1, 0.2], mods) == (0.1, 0.2)
+    assert normalize_omegas({"text": 0.4}, mods) == (0.0, 0.4)
+    with pytest.raises(ValueError):
+        normalize_omegas([0.1], mods)           # wrong length
+    with pytest.raises(ValueError):
+        normalize_omegas({"video": 0.1}, mods)  # unknown modality
+
+
+# ---------------------------------------------------------------------------
+# property sweep: ω ∈ [0, 0.9] × M ∈ {2, 3}
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("M", [2, 3])
+def test_property_masks_across_omega_sweep(M):
+    K = 12
+    rng_seeds = [0, 1, 2]
+    for omega in np.linspace(0.0, 0.9, 10):
+        counts = missing_counts(K, [omega] * M)
+        feasible = M * int(np.floor(omega * K)) <= K * (M - 1)
+        if feasible:
+            assert (counts == int(np.floor(omega * K))).all()
+        for seed in rng_seeds:
+            miss = missing_masks(K, [omega] * M,
+                                 np.random.default_rng(seed))
+            assert miss.shape == (M, K)
+            # realized per-modality sizes match the exposed counts
+            assert (miss.sum(axis=1) == counts).all()
+            # every client keeps >= 1 modality, every modality >= 1 owner
+            assert not miss.all(axis=0).any()
+            assert not miss.all(axis=1).any()
+
+
+@pytest.mark.parametrize("M", [2, 3])
+def test_property_synthetic_population_sweep(M):
+    shapes = {f"m{i}": (3,) for i in range(M)}
+    for omega in np.linspace(0.0, 0.9, 10):
+        store = synthetic_population(12, 4, shapes, 5, float(omega), seed=3)
+        has = _mask_stack(store)
+        assert has.any(axis=0).all()
+        assert has.any(axis=1).all()
+        # non-owners carry exact-zero feature blocks
+        for i, m in enumerate(store.modalities):
+            gone = ~has[i]
+            if gone.any():
+                assert not np.asarray(store.features[m])[gone].any()
+
+
+def test_synthetic_population_matches_partition_mask_statistics():
+    """The two builders share the missing_counts/missing_masks construction:
+    at matched (K, ω, seed) the per-modality missing-set sizes agree
+    exactly (membership may differ — partition's rng consumes shard draws
+    first)."""
+    K = 10
+    ds = DATASETS["iemocap"](seed=5, n=60)
+    for omega in (0.0, 0.2, 0.4, 0.6):
+        clients = partition(ds, K, omega, seed=5)
+        stacked = stack_clients(clients, sorted(ds.features))
+        store = synthetic_population(K, 4, {"audio": (4,), "text": (3,)},
+                                     4, omega, seed=5)
+        for m in ("audio", "text"):
+            assert (np.asarray(stacked.has_modality[m]).sum()
+                    == np.asarray(store.has_modality[m]).sum()), (m, omega)
+
+
+def test_per_modality_omega_vectors():
+    K = 10
+    ds = DATASETS["iemocap"](seed=1, n=60)
+    clients = partition(ds, K, {"audio": 0.5, "text": 0.2}, seed=1)
+    n_missing = {m: sum(m not in c.modalities for c in clients)
+                 for m in ("audio", "text")}
+    assert n_missing == {"audio": 5, "text": 2}
+    store = synthetic_population(K, 4, {"audio": (4,), "text": (3,)}, 4,
+                                 (0.5, 0.2), seed=1)
+    assert int((~np.asarray(store.has_modality["audio"])).sum()) == 5
+    assert int((~np.asarray(store.has_modality["text"])).sum()) == 2
+
+
+# ---------------------------------------------------------------------------
+# class-conditional population features
+# ---------------------------------------------------------------------------
+def test_synthetic_population_class_structure():
+    """Features must carry class signal (the old builder emitted pure noise,
+    so population-scale eval was chance-level by construction)."""
+    store = synthetic_population(8, 64, {"a": (6,)}, 3, 0.0, seed=2,
+                                 snr=2.0)
+    x = np.asarray(store.features["a"]).reshape(-1, 6)
+    y = np.asarray(store.labels).reshape(-1)
+    mus = np.stack([x[y == c].mean(axis=0) for c in range(3)])
+    gaps = [np.linalg.norm(mus[i] - mus[j])
+            for i in range(3) for j in range(i + 1, 3)]
+    # class means separated well beyond the noise floor of the estimate
+    assert min(gaps) > 5 * 6 / np.sqrt(len(y) / 3)
+
+
+def test_synthetic_population_per_modality_snr():
+    kw = dict(K=6, n_per_client=32, feature_shapes={"a": (4,), "b": (4,)},
+              n_classes=3, omega=0.0, seed=4)
+    store = synthetic_population(snr={"a": 3.0, "b": 0.0}, **kw)
+    y = np.asarray(store.labels).reshape(-1)
+
+    def class_spread(m):
+        x = np.asarray(store.features[m]).reshape(-1, 4)
+        mus = np.stack([x[y == c].mean(axis=0) for c in range(3)])
+        return np.linalg.norm(mus - mus.mean(0))
+    assert class_spread("a") > 3 * class_spread("b")
+
+
+# ---------------------------------------------------------------------------
+# Dirichlet shard rebalancing (satellite 3)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("alpha", [0.1, 0.5, 1.0])
+@pytest.mark.parametrize("K", [10, 50])
+def test_property_dirichlet_shards_rebalance(alpha, K):
+    """No shard ends empty and donated indices stay unique (a donor is never
+    popped to empty), even when K is large relative to the per-class sample
+    count."""
+    ds = DATASETS["iemocap"](seed=7, n=max(60, K + 10))
+    clients = partition(ds, K, 0.0, seed=int(alpha * 10) + K,
+                        dirichlet_alpha=alpha)
+    assert len(clients) == K
+    sizes = [c.size for c in clients]
+    assert min(sizes) >= 1
+    # every sample assigned exactly once across clients (move, not copy)
+    assert sum(sizes) == len(ds)
+    all_labels = np.concatenate([c.dataset.labels for c in clients])
+    assert sorted(all_labels.tolist()) == sorted(ds.labels.tolist())
+
+
+def test_dirichlet_shards_too_few_samples_raises():
+    ds = DATASETS["iemocap"](seed=7, n=30)
+    with pytest.raises(ValueError):
+        partition(ds, 50, 0.0, seed=0, dirichlet_alpha=0.1)
+
+
+def test_dirichlet_alpha_plumbs_through_experiment():
+    """runtime.py used to drop dirichlet_alpha on the floor — the label-skew
+    path was dead code from the experiment API."""
+    from repro.fl.runtime import MFLExperiment
+    cfg = dict(dataset="iemocap", scheduler="random", K=6, n_samples=120,
+               seed=0, eval_every=10 ** 9)
+    iid = MFLExperiment(**cfg)
+    skew = MFLExperiment(dirichlet_alpha=0.1, **cfg)
+    assert sum(iid.data_sizes) == sum(skew.data_sizes)
+    # α=0.1 label skew makes shard sizes ragged; IID shards stay equal-ish
+    assert max(iid.data_sizes) - min(iid.data_sizes) <= 1
+    assert np.std(skew.data_sizes) > np.std(iid.data_sizes)

@@ -1,0 +1,305 @@
+"""Scenario library + scan_scenario_grid contract.
+
+Builder properties (split laws, per-modality ω_m, corruption axes), spec
+validation, grid stacking, and the sweep contracts: ``scan_v_grid`` is now a
+thin ``scan_scenario_grid({"V": ...})`` wrapper and must stay bit-exact with
+it, and the sharded ``("scenario",)`` sweep must be bit-exact with the
+single-device vmap (4-device case in a subprocess, grid size deliberately
+not divisible by the device count so padding is exercised).
+"""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.data.partition import missing_counts
+from repro.data.scenarios import (DATASET_SHAPES, ScenarioSpec,
+                                  build_scenario, stack_scenarios)
+from repro.wireless.params import WirelessParams
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+PARAMS = WirelessParams(K=6, B_max=6e6, E_add=2e-4)
+GEOM = dict(dataset="iemocap", K=6, n_per_client=4, n_test=16)
+
+
+def _leaves_equal(a, b) -> bool:
+    """Bit-exact up to NaN==NaN (metrics rows are NaN off the eval cadence;
+    equal_nan chokes on bool/int leaves, hence the dtype split)."""
+    a, b = np.asarray(a), np.asarray(b)
+    if a.dtype.kind == "f":
+        return np.array_equal(a, b, equal_nan=True)
+    return np.array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# spec validation
+# ---------------------------------------------------------------------------
+def test_spec_validation_errors():
+    with pytest.raises(ValueError):
+        ScenarioSpec(dataset="mosei")
+    with pytest.raises(ValueError):
+        ScenarioSpec(split="pathological")
+    with pytest.raises(ValueError):
+        ScenarioSpec(split="dirichlet", alpha=0.0)
+    with pytest.raises(ValueError):
+        ScenarioSpec(split="natural", n_groups=0)
+    with pytest.raises(ValueError):
+        ScenarioSpec(erasure_rate=1.5)
+    with pytest.raises(ValueError):
+        ScenarioSpec(test_missing="video")
+    with pytest.raises(ValueError):
+        ScenarioSpec(omega=1.0)                 # normalize-at-construction
+
+
+def test_spec_normalizes_omega_snr_to_tuples():
+    s = ScenarioSpec(omega={"text": 0.4}, snr=2.0)
+    assert s.omega == (0.0, 0.4)                # sorted: (audio, text)
+    assert s.snr == (2.0, 2.0)
+    assert s.modalities == ("audio", "text")
+    assert "om=0/0.4" in s.label()
+    assert ScenarioSpec(name="zed").label() == "zed"
+
+
+# ---------------------------------------------------------------------------
+# builder properties
+# ---------------------------------------------------------------------------
+def test_build_scenario_ownership_matches_missing_counts():
+    for omega in (0.0, 0.3, 0.6, (0.6, 0.2)):
+        spec = ScenarioSpec(omega=omega, **GEOM)
+        store, tf, tl = build_scenario(spec, PARAMS)
+        counts = missing_counts(spec.K, spec.omega)
+        for i, m in enumerate(spec.modalities):
+            has = np.asarray(store.has_modality[m])
+            assert int((~has).sum()) == counts[i], (omega, m)
+        has_all = np.stack([np.asarray(store.has_modality[m])
+                            for m in spec.modalities])
+        assert has_all.any(axis=0).all()
+        # cost vectors filled for owners (Eqs. 15-18), zero otherwise
+        assert (np.asarray(store.gamma_bits)[has_all.any(axis=0)] > 0).all()
+
+
+def test_build_scenario_shapes_and_labels():
+    spec = ScenarioSpec(**GEOM)
+    store, tf, tl = build_scenario(spec, PARAMS)
+    shapes, C = DATASET_SHAPES["iemocap"]
+    for m, shape in shapes.items():
+        assert np.asarray(store.features[m]).shape == (6, 4) + shape
+        assert tf[m].shape == (16,) + shape
+    y = np.asarray(store.labels)
+    assert y.shape == (6, 4) and y.min() >= 0 and y.max() < C
+    assert tl.shape == (16,) and tl.max() < C
+
+
+def test_dirichlet_split_skews_labels():
+    C = DATASET_SHAPES["iemocap"][1]
+
+    def mean_client_label_diversity(split, alpha):
+        spec = ScenarioSpec(split=split, alpha=alpha, omega=0.0,
+                            dataset="iemocap", K=8, n_per_client=64,
+                            n_test=8, seed=1)
+        y = np.asarray(build_scenario(spec, PARAMS)[0].labels)
+        return np.mean([len(set(r.tolist())) for r in y])
+
+    iid = mean_client_label_diversity("iid", 0.5)
+    skew = mean_client_label_diversity("dirichlet", 0.1)
+    assert iid > 0.8 * C                        # 64 draws cover ~all classes
+    assert skew < 0.6 * iid                     # α=0.1 collapses per-client
+
+
+def test_natural_split_group_structure():
+    """Clients within a natural group share a feature offset: within-group
+    client-mean distances must be far below cross-group ones."""
+    spec = ScenarioSpec(split="natural", alpha=100.0, n_groups=2,
+                        group_sigma=4.0, omega=0.0, dataset="iemocap",
+                        K=8, n_per_client=16, n_test=8, seed=2)
+    x = np.asarray(build_scenario(spec, PARAMS)[0].features["audio"])
+    mu = x.mean(axis=1).reshape(8, -1)          # [K, d] client means
+    groups = (np.arange(8) * 2) // 8
+    d = np.linalg.norm(mu[:, None] - mu[None], axis=-1)
+    within = d[groups[:, None] == groups[None]].mean()
+    across = d[groups[:, None] != groups[None]].mean()
+    assert across > 2 * within
+
+
+def test_erasure_zeroes_sample_blocks():
+    spec = ScenarioSpec(erasure_rate=0.5, omega=0.0, dataset="iemocap",
+                        K=8, n_per_client=32, n_test=8, seed=3)
+    store = build_scenario(spec, PARAMS)[0]
+    # an erased (client, sample) slot is zero across the whole block, and
+    # the realized rate is near 0.5 for every modality (same mask per spec
+    # draw order, drawn per modality)
+    for m in spec.modalities:
+        x = np.asarray(store.features[m]).reshape(8, 32, -1)
+        dead = ~np.abs(x).sum(-1).astype(bool)
+        assert 0.3 < dead.mean() < 0.7, (m, dead.mean())
+
+
+def test_test_missing_zeroes_only_that_test_modality():
+    spec = ScenarioSpec(test_missing="text", omega=0.0, **GEOM)
+    store, tf, tl = build_scenario(spec, PARAMS)
+    assert not tf["text"].any()
+    assert tf["audio"].any()
+    # clients' train features keep both modalities — it's deployment-time
+    assert np.asarray(store.features["text"]).any()
+
+
+def test_features_carry_class_signal():
+    spec = ScenarioSpec(omega=0.0, snr=2.0, dataset="iemocap", K=4,
+                        n_per_client=128, n_test=8, seed=4)
+    store = build_scenario(spec, PARAMS)[0]
+    x = np.asarray(store.features["audio"]).reshape(4 * 128, -1)
+    y = np.asarray(store.labels).reshape(-1)
+    C = spec.n_classes
+    mus = np.stack([x[y == c].mean(axis=0) for c in range(C)
+                    if (y == c).sum() > 5])
+    spread = np.linalg.norm(mus - mus.mean(0), axis=-1)
+    assert spread.min() > 1.0                   # not pure noise
+
+
+# ---------------------------------------------------------------------------
+# stacking
+# ---------------------------------------------------------------------------
+def test_stack_scenarios_shapes_and_geometry_check():
+    specs = [ScenarioSpec(omega=w, seed=i, **GEOM)
+             for i, w in enumerate((0.0, 0.3, 0.6))]
+    grid = stack_scenarios(specs, PARAMS)
+    assert grid.n == 3
+    assert np.asarray(grid.stores.labels).shape == (3, 6, 4)
+    assert grid.test_labels.shape == (3, 16)
+    assert grid.overrides["V"].shape == (3,)
+    assert grid.overrides["has"].shape == (3, 2, 6)
+    assert grid.overrides["tau_cmp"].shape == (3, 6)
+    row = grid.store_row(1)
+    assert np.asarray(row.labels).shape == (6, 4)
+
+    with pytest.raises(ValueError):
+        stack_scenarios([], PARAMS)
+    with pytest.raises(ValueError):
+        stack_scenarios([specs[0],
+                         ScenarioSpec(dataset="iemocap", K=8,
+                                      n_per_client=4, n_test=16)], PARAMS)
+
+
+# ---------------------------------------------------------------------------
+# sweep contracts (single device in-process; 4-device in a subprocess)
+# ---------------------------------------------------------------------------
+def _tiny_engine_and_xs(rounds=3, eval_every=2):
+    from repro.fl.client import PaperModelAdapter
+    from repro.fl.fused_round import FusedRoundEngine, draw_population_xs
+    from repro.wireless.channel import Channel
+    from repro.wireless.policies import JCSBAPolicy
+
+    specs = [ScenarioSpec(split=s, omega=w, seed=i, **GEOM)
+             for i, (s, w) in enumerate((("iid", 0.0), ("dirichlet", 0.3),
+                                         ("iid", 0.6)))]
+    grid = stack_scenarios(specs, PARAMS)
+    eng = FusedRoundEngine.from_store(grid.store_row(0), PARAMS,
+                                      JCSBAPolicy(6, max_cohort=3),
+                                      PaperModelAdapter("iemocap"), seed=0)
+    rng = np.random.default_rng(1)
+    xs = draw_population_xs(Channel(PARAMS, rng), rng, 6, rounds,
+                            eval_every=eval_every, include_final=True)
+    return grid, eng, xs
+
+
+def test_scenario_grid_runs_and_metrics_finite():
+    import jax
+
+    grid, eng, xs = _tiny_engine_and_xs()
+    carries, auxs = jax.block_until_ready(eng.scan_scenario_grid(
+        grid.overrides, eng.fresh_carry(), xs, stores=grid.stores,
+        test_sets=(grid.test_features, grid.test_labels)))
+    acc = np.asarray(auxs.metrics["multimodal"])    # [S, R]
+    assert acc.shape == (3, 3)
+    emask = np.asarray(auxs.eval_mask)
+    assert np.isfinite(acc[emask]).all()
+    assert (acc[emask] >= 0).all() and (acc[emask] <= 1).all()
+    assert np.isfinite(np.asarray(carries.spent)).all()
+    # the grid rows genuinely differ (ω axis changes participation physics)
+    ok = np.asarray(auxs.ok)                        # [S, R, K]
+    assert len({tuple(ok[s].sum(-1)) for s in range(3)}) > 1
+
+
+def test_scan_v_grid_delegates_bit_exact():
+    """scan_v_grid is now scan_scenario_grid({"V": ...}) — same leaves,
+    bit for bit, on the single-device path."""
+    import jax
+
+    _, eng, xs = _tiny_engine_and_xs()
+    V = [0.1, 1.0, 10.0]
+    a = jax.block_until_ready(eng.scan_v_grid(V, eng.fresh_carry(), xs))
+    b = jax.block_until_ready(eng.scan_scenario_grid(
+        {"V": np.asarray(V)}, eng.fresh_carry(), xs))
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        assert _leaves_equal(la, lb)
+
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import json
+import numpy as np
+import jax
+
+from repro.data.scenarios import ScenarioSpec, stack_scenarios
+from repro.fl.client import PaperModelAdapter
+from repro.fl.fused_round import FusedRoundEngine, draw_population_xs
+from repro.launch.mesh import make_sweep_mesh
+from repro.wireless.channel import Channel
+from repro.wireless.params import WirelessParams
+from repro.wireless.policies import JCSBAPolicy
+
+params = WirelessParams(K=6, B_max=6e6, E_add=2e-4)
+geom = dict(dataset="iemocap", K=6, n_per_client=4, n_test=16)
+specs = [ScenarioSpec(split=s, omega=w, noise_sigma=ns, seed=i, **geom)
+         for i, (s, w, ns) in enumerate(
+             (("iid", 0.0, 0.0), ("dirichlet", 0.3, 0.0),
+              ("iid", 0.6, 0.5)))]          # 3 rows on 4 devices -> padding
+grid = stack_scenarios(specs, params)
+eng = FusedRoundEngine.from_store(grid.store_row(0), params,
+                                  JCSBAPolicy(6, max_cohort=3),
+                                  PaperModelAdapter("iemocap"), seed=0)
+rng = np.random.default_rng(1)
+xs = draw_population_xs(Channel(params, rng), rng, 6, 3, eval_every=2,
+                        include_final=True)
+kw = dict(stores=grid.stores,
+          test_sets=(grid.test_features, grid.test_labels))
+carry = eng.fresh_carry()
+
+single = eng.scan_scenario_grid(grid.overrides, carry, xs, mesh=None, **kw)
+mesh = make_sweep_mesh()
+assert mesh is not None and int(mesh.devices.size) == 4, mesh
+shard = eng.scan_scenario_grid(grid.overrides, carry, xs, mesh=mesh, **kw)
+
+bit_exact = True
+for a, b in zip(jax.tree.leaves(single), jax.tree.leaves(shard)):
+    a, b = np.asarray(a), np.asarray(b)
+    assert a.shape == b.shape, (a.shape, b.shape)
+    eq = (np.array_equal(a, b, equal_nan=True) if a.dtype.kind == "f"
+          else np.array_equal(a, b))
+    if not eq:
+        bit_exact = False
+        np.testing.assert_allclose(a, b, rtol=2e-6, atol=1e-7)
+acc = np.asarray(shard[1].metrics["multimodal"])   # [S, R]
+emask = np.asarray(shard[1].eval_mask)             # [S, R]
+print(json.dumps({"ok": True, "devices": jax.device_count(),
+                  "bit_exact": bit_exact, "n_S": int(acc.shape[0]),
+                  "finite": bool(np.isfinite(acc[emask]).all())}))
+"""
+
+
+def test_scan_scenario_grid_sharded_matches_single_device():
+    env = dict(os.environ, PYTHONPATH=SRC, JAX_PLATFORMS="cpu")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stderr[-2000:]
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    assert out["ok"] and out["devices"] == 4
+    assert out["n_S"] == 3
+    assert out["bit_exact"]
+    assert out["finite"]
