@@ -330,6 +330,28 @@ def bench_batched_rounds(quick: bool):
              f"speedup={r['speedup']}x")
 
 
+def bench_serving(quick: bool):
+    from benchmarks.serving import run_benchmark
+    out = run_benchmark(tiny=TINY or quick)
+    PAYLOADS["serving"] = out
+    for r in out["prefill"]:
+        emit(f"serving_prefill_{r['arch']}_S={r['prompt_len']}",
+             r["bulk_ms"] * 1e3,
+             f"teacher_forced_ms={r['teacher_forced_ms']};"
+             f"bulk_ms={r['bulk_ms']};speedup={r['speedup']}x")
+    s = out["steady_state"]
+    emit(f"serving_steady_{s['arch']}_B={s['batch']}",
+         s["decode"]["mean_ms"] * 1e3,
+         f"tok_per_s={s['tokens_per_s']};p99_ms={s['decode']['p99_ms']}")
+    c = out["continuous"]
+    emit(f"serving_continuous_{c['arch']}",
+         c["post_swap_decode"]["p99_ms"] * 1e3,
+         f"tok_per_s={c['tokens_per_s']};"
+         f"swap_spike_p99_ms={c['swap_spike_p99_ms']};"
+         f"swap_ms={c['swap_wall']['mean_ms']};"
+         f"recompiles={c['recompiles_post_warmup']}")
+
+
 # ---------------------------------------------------------------------------
 def main() -> None:
     global TINY
@@ -359,6 +381,7 @@ def main() -> None:
         "jcsba_solver": bench_jcsba_solver,
         "fused_round": bench_fused_round,
         "fusion_kernel": bench_fusion_kernel,
+        "serving": bench_serving,
     }
     if args.v_frontier:
         args.only = "v_frontier"

@@ -1,0 +1,200 @@
+"""Serving benchmarks: bulk prefill vs teacher forcing, steady-state decode,
+and the round-boundary hot-swap spike under live MFL training.
+
+Three measurements:
+
+* ``prefill`` — one chunked bulk pass filling the KV cache
+  (``steps.make_bulk_prefill``) vs the legacy teacher-forced per-token loop,
+  identical cache contents (tests/test_decode_consistency.py).  The
+  acceptance number is the bulk speedup at prompt_len>=64 on the reduced
+  config (target >=2x).
+* ``steady_state`` — ContinuousServer decode with no training running:
+  tokens/sec and the per-step latency distribution (p50/p95/p99) — the
+  no-swap baseline.
+* ``continuous`` — ``run_continuous``: fused MFL rounds interleaved with
+  decode batches, params hot-swapped at every round boundary through the
+  flat donated buffers (``launch/parambuf``).  Reports the p99 of the
+  first-decode-step-after-swap latencies against the steady-state p99 (the
+  swap-induced spike), the swap wall itself, and the post-warmup recompile
+  count — which must be ZERO (asserted; the whole point of the donated
+  buffer design).
+
+  PYTHONPATH=src python -m benchmarks.serving                 # full
+  PYTHONPATH=src python -m benchmarks.serving --tiny          # CI smoke
+  PYTHONPATH=src python -m benchmarks.serving --tiny --json-out BENCH_serving.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import List, Optional
+
+import numpy as np
+
+
+def _pcts(xs) -> dict:
+    a = np.asarray(xs, np.float64) * 1e3
+    return {"p50_ms": round(float(np.percentile(a, 50)), 4),
+            "p95_ms": round(float(np.percentile(a, 95)), 4),
+            "p99_ms": round(float(np.percentile(a, 99)), 4),
+            "mean_ms": round(float(a.mean()), 4)}
+
+
+# ---------------------------------------------------------------------------
+def bench_prefill(arch: str, B: int, prompt_len: int, reps: int) -> dict:
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.launch import steps as S
+    from repro.launch.serve import teacher_forced_prefill
+    from repro.models import transformer as T
+
+    cfg = get_config(arch).reduced()
+    rng = np.random.default_rng(0)
+    params = S.init_fn(cfg)(jax.random.key(0))
+    prompts = jnp.asarray(rng.integers(0, min(cfg.vocab_size, 1000),
+                                       (B, prompt_len)), jnp.int32)
+    max_len = prompt_len + 8
+    serve_step = jax.jit(lambda p, c, t, i: T.decode_step(p, c, t, i, cfg))
+    bulk = jax.jit(S.make_bulk_prefill(cfg, attn_chunk=64))
+
+    def fresh():
+        return T.init_cache(cfg, B, max_len, cfg.param_dtype)
+
+    def run_tf():
+        nxt, _ = teacher_forced_prefill(serve_step, params, fresh(), prompts)
+        jax.block_until_ready(nxt)
+
+    def run_bulk():
+        nxt, _ = bulk(params, prompts, fresh())
+        jax.block_until_ready(nxt)
+
+    out = {"arch": arch, "batch": B, "prompt_len": prompt_len}
+    for name, fn in (("teacher_forced", run_tf), ("bulk", run_bulk)):
+        fn()                                    # warmup / compile
+        walls = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            fn()
+            walls.append(time.perf_counter() - t0)
+        out[f"{name}_ms"] = round(min(walls) * 1e3, 3)
+    out["speedup"] = round(out["teacher_forced_ms"] / out["bulk_ms"], 2)
+    print(f"[prefill] {arch} B={B} S={prompt_len}: "
+          f"teacher-forced {out['teacher_forced_ms']}ms vs bulk "
+          f"{out['bulk_ms']}ms -> {out['speedup']}x", flush=True)
+    return out
+
+
+# ---------------------------------------------------------------------------
+def _make_server_and_exp(arch: str, B: int, prompt_len: int, budget: int):
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.fl.runtime import MFLExperiment
+    from repro.launch import steps as S
+    from repro.launch.continuous import ContinuousServer
+
+    cfg = get_config(arch).reduced()
+    exp = MFLExperiment(dataset="iemocap", scheduler="jcsba", K=6,
+                        n_samples=120, seed=0, eval_every=10 ** 9,
+                        engine="fused")
+    feats = {m: jnp.asarray(x[:B])
+             for m, x in sorted(exp.test_ds.features.items())}
+    lm = S.init_fn(cfg)(jax.random.key(0))
+    server = ContinuousServer(cfg, lm, exp.global_params, feats,
+                              max_len=prompt_len + budget + 8)
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, min(cfg.vocab_size, 1000), (B, prompt_len))
+    return exp, server, prompts
+
+
+def bench_steady_state(arch: str, B: int, prompt_len: int,
+                       gen_len: int) -> dict:
+    import jax.numpy as jnp
+    _, server, prompts = _make_server_and_exp(arch, B, prompt_len, gen_len)
+    server.start(jnp.asarray(prompts, jnp.int32))
+    server.decode_batch(4)                      # warmup
+    walls = server.decode_batch(gen_len)
+    toks = B * gen_len
+    out = {"arch": arch, "batch": B, "prompt_len": prompt_len,
+           "gen_len": gen_len,
+           "tokens_per_s": round(toks / sum(walls), 1),
+           "decode": _pcts(walls)}
+    print(f"[steady] {arch} B={B}: {out['tokens_per_s']} tok/s "
+          f"p50={out['decode']['p50_ms']}ms p99={out['decode']['p99_ms']}ms",
+          flush=True)
+    return out
+
+
+def bench_continuous(arch: str, B: int, prompt_len: int, rounds: int,
+                     steps_per_round: int, baseline_p99_ms: float) -> dict:
+    from repro.launch.continuous import run_continuous
+    exp, server, prompts = _make_server_and_exp(
+        arch, B, prompt_len, rounds * steps_per_round)
+    rep = run_continuous(exp, server, prompts, rounds=rounds,
+                         steps_per_round=steps_per_round)
+    recompiles = sum(rep["recompiles"].values())
+    assert recompiles == 0, (
+        f"post-warmup recompiles under live training: {rep['recompiles']} — "
+        f"the donated-buffer hot-swap contract is broken")
+    post = _pcts(rep["post_swap_latencies_s"])
+    steady = _pcts(rep["steady_latencies_s"])
+    out = {"arch": arch, "batch": B, "rounds": rounds,
+           "steps_per_round": steps_per_round,
+           "tokens_per_s": round(rep["tokens_per_s"], 1),
+           "steady_decode": steady,
+           "post_swap_decode": post,
+           "swap_wall": _pcts(rep["swap_walls_s"]),
+           "round_wall_ms": round(
+               float(np.mean(rep["round_walls_s"])) * 1e3, 2),
+           "no_swap_baseline_p99_ms": baseline_p99_ms,
+           "swap_spike_p99_ms": round(post["p99_ms"] - baseline_p99_ms, 4),
+           "recompiles_post_warmup": recompiles}
+    print(f"[continuous] {arch} {rounds}x{steps_per_round} rounds/steps: "
+          f"{out['tokens_per_s']} tok/s, post-swap p99 {post['p99_ms']}ms vs "
+          f"no-swap baseline {baseline_p99_ms}ms, swap "
+          f"{out['swap_wall']['mean_ms']}ms, recompiles={recompiles}",
+          flush=True)
+    return out
+
+
+# ---------------------------------------------------------------------------
+def run_benchmark(tiny: bool) -> dict:
+    arch = "qwen3-0.6b"
+    if tiny:
+        B, prompt_len, gen_len = 2, 64, 24
+        rounds, spr, reps = 2, 8, 3
+    else:
+        B, prompt_len, gen_len = 4, 128, 128
+        rounds, spr, reps = 4, 32, 5
+    prefill = [bench_prefill(arch, B, prompt_len, reps)]
+    if not tiny:
+        prefill.append(bench_prefill(arch, B, 64, reps))
+    steady = bench_steady_state(arch, B, prompt_len, gen_len)
+    cont = bench_continuous(arch, B, prompt_len, rounds, spr,
+                            steady["decode"]["p99_ms"])
+    return {"benchmark": "serving",
+            "regime": "reduced config, CPU container; serving params behind "
+                      "flat donated buffers, fused iemocap MFL training "
+                      "(K=6) interleaved with decode",
+            "prefill": prefill, "steady_state": steady,
+            "continuous": cont}
+
+
+def main(argv: Optional[List[str]] = None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: B=2, prompt 64, 2 rounds x 8 steps")
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args(argv)
+    out = run_benchmark(args.tiny)
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(out, f, indent=2)
+        print(f"wrote {args.json_out}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

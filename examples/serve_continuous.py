@@ -1,0 +1,17 @@
+"""Continuous serving under live MFL training: a decode stream whose fusion
+params hot-swap at every round boundary.
+
+One process, one device chain: fused JCSBA rounds (``engine="fused"``)
+advance the global fusion params; between rounds a ``ContinuousServer``
+decodes a reduced-LM token stream whose sampling layer carries the fused
+multimodal bias.  Each boundary swap is ONE donated device copy into the
+serving buffers (``launch/parambuf``) — the decode jit cache stays warm, and
+the run asserts zero post-warmup recompiles.
+
+  PYTHONPATH=src python examples/serve_continuous.py --rounds 3
+  PYTHONPATH=src python -m repro.launch.continuous --help   # full CLI
+"""
+from repro.launch.continuous import main
+
+if __name__ == "__main__":
+    main()

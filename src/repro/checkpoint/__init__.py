@@ -1,3 +1,5 @@
-from .checkpoint import save_checkpoint, load_checkpoint, latest_checkpoint
+from .checkpoint import (save_checkpoint, save_flat_checkpoint,
+                         load_checkpoint, latest_checkpoint)
 
-__all__ = ["save_checkpoint", "load_checkpoint", "latest_checkpoint"]
+__all__ = ["save_checkpoint", "save_flat_checkpoint", "load_checkpoint",
+           "latest_checkpoint"]

@@ -2,6 +2,15 @@
 
 Leaves are flattened by '/'-joined key path; the manifest records tree
 structure, dtypes and step metadata so restore round-trips exactly.
+
+Two on-disk layouts share the manifest schema:
+
+* **tree** (``save_checkpoint``): one npz entry per leaf — human-greppable.
+* **flat** (``save_flat_checkpoint``): one contiguous blob per dtype in the
+  ``launch/parambuf`` serving layout (leaf order/offsets recorded under
+  ``manifest["flat"]``), so a serving process can mmap-load straight into
+  its packed buffer tree.  ``load_checkpoint`` detects the layout from the
+  manifest and returns the identical nested dict either way.
 """
 from __future__ import annotations
 
@@ -56,10 +65,43 @@ def save_checkpoint(path: str, tree: Any, step: int = 0,
     return fn + ".npz"
 
 
+def save_flat_checkpoint(path: str, tree: Any, step: int = 0,
+                         metadata: Optional[dict] = None) -> str:
+    """Save through the ``launch/parambuf`` flat layout: one contiguous 1-D
+    blob per dtype instead of one npz entry per leaf.  The manifest keeps the
+    tree-layout fields (``keys``/``dtypes``/``shapes``) so consumers that
+    only read the manifest see no difference; ``load_checkpoint`` restores
+    the identical nested dict transparently."""
+    from ..launch.parambuf import pack_np, spec_of
+    os.makedirs(path, exist_ok=True)
+    spec = spec_of(tree)
+    bufs, _ = pack_np(tree, spec)
+    fn = os.path.join(path, f"ckpt_{step:08d}")
+    np.savez(fn + ".npz", **{f"flat__{dt}": b for dt, b in bufs.items()})
+    manifest = {
+        "step": step,
+        "keys": sorted(ls.path for ls in spec.leaves),
+        "dtypes": {ls.path: ls.dtype for ls in spec.leaves},
+        "shapes": {ls.path: list(ls.shape) for ls in spec.leaves},
+        "layout": "flat",
+        "flat": {
+            "order": [[ls.path, list(ls.shape), ls.dtype, ls.offset]
+                      for ls in spec.leaves],
+            "buffers": {dt: n for dt, n in spec.sizes},
+        },
+        "metadata": metadata or {},
+    }
+    with open(fn + ".json", "w") as f:
+        json.dump(manifest, f, indent=1)
+    return fn + ".npz"
+
+
 def load_checkpoint(path: str, step: Optional[int] = None
                     ) -> Tuple[dict, dict]:
     """Returns (tree-as-nested-dicts, manifest). Lists are restored as dicts
-    keyed '#i' — callers that saved dict-only pytrees round-trip exactly."""
+    keyed '#i' — callers that saved dict-only pytrees round-trip exactly.
+    Flat-layout checkpoints (``save_flat_checkpoint``) are detected from the
+    manifest and unpacked to the same nested dict."""
     if step is None:
         fn = latest_checkpoint(path)
         if fn is None:
@@ -70,6 +112,12 @@ def load_checkpoint(path: str, step: Optional[int] = None
         manifest = json.load(f)
     blob = np.load(fn)
     tree: dict = {}
+    if manifest.get("layout") == "flat":
+        for key, shape, dt, off in manifest["flat"]["order"]:
+            n = int(np.prod(shape, dtype=np.int64)) if shape else 1
+            _set_path(tree, key,
+                      blob[f"flat__{dt}"][off:off + n].reshape(shape))
+        return tree, manifest
     for k in manifest["keys"]:
         _set_path(tree, k, blob[k])
     return tree, manifest

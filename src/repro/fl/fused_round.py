@@ -401,6 +401,14 @@ class FusedRoundEngine:
             delta=f32(np.full((M, self.K), self._init_delta)),
             model_dist=f32(np.zeros(self.K)))
 
+    def round_params(self, carry: FusedCarry):
+        """Round-boundary params export for live serving: the carry's global
+        fusion params, straight off the device chain — no host mirror write
+        (cf. ``export_carry``), so a serving process can hot-swap them into
+        its donated buffer tree (``launch/continuous.py``) without waiting
+        on the queue/tracker decode."""
+        return carry.params
+
     def export_carry(self, carry: FusedCarry) -> None:
         """Write the carry back into the host-side mirrors (checkpointing,
         final_metrics, interop with the non-fused paths)."""

@@ -20,9 +20,7 @@ Round engines (``engine=`` — "seq" | "batched" | "fused")
 ---------------------------------------------------------
 One kwarg selects how rounds execute; a ``":<backend>"`` suffix picks the
 JCSBA solver backend for parity studies (``"batched:np"`` — float64 numpy
-mirror, ``"seq:seq"`` — the original scalar path; default jax).  The legacy
-``batched=`` / ``solver=`` / ``fused=`` trio maps onto the same spec and
-now emits a DeprecationWarning.
+mirror, ``"seq:seq"`` — the original scalar path; default jax).
 
 Batched round engine (default, ``engine="batched"``)
 ----------------------------------------------------
@@ -136,27 +134,6 @@ class RoundRecord:
 ENGINE_LOOPS = ("seq", "batched", "fused")
 
 
-def _resolve_engine(engine: str, batched, solver, fused) -> str:
-    """Collapse the legacy ``batched=``/``solver=``/``fused=`` trio into the
-    unified ``engine="<loop>[:<backend>]"`` spec (with a DeprecationWarning
-    when any legacy kwarg is passed)."""
-    legacy = {k: v for k, v in
-              (("batched", batched), ("solver", solver), ("fused", fused))
-              if v is not None}
-    if legacy:
-        warnings.warn(
-            f"MFLExperiment({', '.join(k + '=' for k in legacy)}...) is "
-            f"deprecated; use the unified engine= spec — "
-            f"'seq' | 'batched' | 'fused', with an optional "
-            f"':<jcsba backend>' suffix (e.g. 'batched:np')",
-            DeprecationWarning, stacklevel=3)
-        loop = ("fused" if legacy.get("fused") else
-                "seq" if batched is False else "batched")
-        backend = legacy.get("solver", "jax")
-        return f"{loop}:{backend}" if backend != "jax" else loop
-    return engine
-
-
 class MFLExperiment:
     def __init__(self, dataset: str = "crema_d", scheduler: str = "jcsba",
                  K: int = 10, omega: float = 0.3, n_samples: int = 1200,
@@ -164,11 +141,7 @@ class MFLExperiment:
                  eta: float = 0.05, V: float = 1.0, seed: int = 0,
                  params: Optional[WirelessParams] = None,
                  scheduler_kwargs: Optional[dict] = None,
-                 eval_every: int = 1, engine: str = "batched",
-                 batched: Optional[bool] = None,
-                 solver: Optional[str] = None,
-                 fused: Optional[bool] = None):
-        engine = _resolve_engine(engine, batched, solver, fused)
+                 eval_every: int = 1, engine: str = "batched"):
         loop, _, backend = engine.partition(":")
         backend = backend or "jax"
         if loop not in ENGINE_LOOPS:

@@ -1,0 +1,146 @@
+"""Flat donated parameter buffers: pack a params pytree into one contiguous
+1-D buffer per dtype + static unpack metadata.
+
+Why: the serving hot path wants a round-boundary params hot-swap to be ONE
+donated device copy, not a pytree of hundreds of small transfers.  A
+``ParamSpec`` freezes the tree structure and every leaf's (path, shape,
+dtype, offset); ``pack`` is a per-dtype ``jnp.concatenate`` of the raveled
+leaves (reduced configs are all-float32, so literally one buffer) and
+``unpack`` is static slices + reshapes that XLA folds into views — a jitted
+decode step reading params through ``unpack(bufs, spec)`` touches the same
+bytes as one reading the pytree, with zero per-leaf dispatch.
+
+``make_swap(spec)`` jits the pack with the OLD buffers donated: XLA aliases
+the donated inputs to the (shape/dtype-identical) outputs, so the
+concatenate writes the fresh params straight into the old allocation —
+steady-state serving never allocates on a swap.  ``pack_np`` is the host
+mirror of the same layout, reused by ``checkpoint.save_flat_checkpoint``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class LeafSpec(NamedTuple):
+    path: str                    # '/'-joined key path (checkpoint convention)
+    shape: Tuple[int, ...]
+    dtype: str                   # canonical dtype name, e.g. "float32"
+    offset: int                  # element offset into this dtype's buffer
+
+
+class ParamSpec(NamedTuple):
+    """Static (hashable) layout of a packed pytree."""
+    treedef: Any                             # jax PyTreeDef
+    leaves: Tuple[LeafSpec, ...]             # in tree_flatten order
+    sizes: Tuple[Tuple[str, int], ...]       # (dtype name, total elements)
+
+    @property
+    def n_buffers(self) -> int:
+        return len(self.sizes)
+
+    def nbytes(self) -> int:
+        return sum(n * _np_dtype(dt).itemsize for dt, n in self.sizes)
+
+
+def _np_dtype(name: str) -> np.dtype:
+    try:
+        return np.dtype(name)
+    except TypeError:            # ml_dtypes types (bfloat16, float8_*, ...)
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        parts.append(str(p.key) if hasattr(p, "key")
+                     else f"#{getattr(p, 'idx', p)}")
+    return "/".join(parts)
+
+
+def _leaf_size(shape: Tuple[int, ...]) -> int:
+    return int(np.prod(shape, dtype=np.int64)) if shape else 1
+
+
+def spec_of(tree) -> ParamSpec:
+    """Freeze ``tree``'s layout.  Works on arrays or ShapeDtypeStructs."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    offsets: Dict[str, int] = {}
+    leaves = []
+    for path, leaf in flat:
+        dt = jnp.result_type(leaf).name
+        shape = tuple(np.shape(leaf))
+        off = offsets.get(dt, 0)
+        leaves.append(LeafSpec(_path_str(path), shape, dt, off))
+        offsets[dt] = off + _leaf_size(shape)
+    return ParamSpec(treedef, tuple(leaves), tuple(sorted(offsets.items())))
+
+
+def pack(tree, spec: ParamSpec = None) -> Dict[str, jax.Array]:
+    """tree -> {dtype name: 1-D device buffer}, leaves in flatten order."""
+    if spec is None:
+        spec = spec_of(tree)
+    groups: Dict[str, list] = {}
+    for ls, leaf in zip(spec.leaves, jax.tree_util.tree_leaves(tree)):
+        groups.setdefault(ls.dtype, []).append(
+            jnp.asarray(leaf, dtype=ls.dtype).reshape(-1))
+    return {dt: (jnp.concatenate(groups[dt]) if len(groups[dt]) > 1
+                 else groups[dt][0])
+            for dt, _ in spec.sizes}
+
+
+def unpack(bufs: Dict[str, jax.Array], spec: ParamSpec):
+    """{dtype: buffer} -> the original pytree (static slices + reshapes)."""
+    leaves = []
+    for ls in spec.leaves:
+        n = _leaf_size(ls.shape)
+        seg = jax.lax.slice_in_dim(bufs[ls.dtype], ls.offset, ls.offset + n)
+        leaves.append(seg.reshape(ls.shape))
+    return jax.tree_util.tree_unflatten(spec.treedef, leaves)
+
+
+def pack_np(tree, spec: ParamSpec = None):
+    """Host-side pack into numpy buffers (the checkpoint flat layout).
+
+    Returns ``(bufs, spec)`` with the identical element layout as ``pack``.
+    """
+    if spec is None:
+        spec = spec_of(tree)
+    bufs = {dt: np.empty(n, dtype=_np_dtype(dt)) for dt, n in spec.sizes}
+    for ls, leaf in zip(spec.leaves, jax.tree_util.tree_leaves(tree)):
+        n = _leaf_size(ls.shape)
+        bufs[ls.dtype][ls.offset:ls.offset + n] = \
+            np.asarray(leaf).astype(_np_dtype(ls.dtype), copy=False) \
+              .reshape(-1)
+    return bufs, spec
+
+
+def unpack_np(bufs: Dict[str, np.ndarray], spec: ParamSpec):
+    """Host-side inverse of ``pack_np`` (no device transfer)."""
+    leaves = []
+    for ls in spec.leaves:
+        n = _leaf_size(ls.shape)
+        leaves.append(bufs[ls.dtype][ls.offset:ls.offset + n]
+                      .reshape(ls.shape))
+    return jax.tree_util.tree_unflatten(spec.treedef, leaves)
+
+
+def make_swap(spec: ParamSpec):
+    """Jitted ``(old_bufs, new_tree) -> new_bufs`` with the old buffers
+    donated — the hot-swap primitive.  Each leaf is written into its static
+    offset of the donated buffer via ``dynamic_update_slice``; because the
+    input is donated and dead after the first write, XLA performs every
+    update in place — the swap is one pass over the params into the old
+    allocation, zero new allocations at steady state."""
+    def _swap(old_bufs, tree):
+        bufs = dict(old_bufs)
+        for ls, leaf in zip(spec.leaves, jax.tree_util.tree_leaves(tree)):
+            seg = jnp.asarray(leaf, dtype=ls.dtype).reshape(-1)
+            bufs[ls.dtype] = jax.lax.dynamic_update_slice_in_dim(
+                bufs[ls.dtype], seg, ls.offset, axis=0)
+        return bufs
+    return jax.jit(_swap, donate_argnums=(0,))

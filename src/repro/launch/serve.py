@@ -4,6 +4,13 @@ On this CPU container use ``--reduced``; the production path is the same code
 under the dry-run mesh/shardings.  For VLM archs the vision decision head's
 logit bias is computed once at prefill and added at the sampling layer —
 per-step decode is the backbone only (see steps.make_serve_step docstring).
+
+Prefill runs as ONE bulk pass that fills the KV cache and exports it
+(``steps.make_bulk_prefill``); ``--teacher-forced`` keeps the legacy
+token-by-token path for A/B (``benchmarks/serving.py`` commits the ratio).
+Audio archs precompute all layers' cross-K/V in one stacked einsum
+(``encdec.cross_kv``).  For round-boundary params hot-swap under live MFL
+training, see ``launch/continuous.py``.
 """
 from __future__ import annotations
 
@@ -17,6 +24,18 @@ import numpy as np
 from ..configs import get_config
 from ..models import transformer as T, encdec
 from . import steps as S
+
+
+def teacher_forced_prefill(serve_step, params, cache, prompts):
+    """Legacy prefill: teacher-force the prompt one token at a time through
+    decode steps.  Kept as the bulk path's A/B baseline — it fills the cache
+    identically (tests/test_decode_consistency.py) at S times the
+    dispatches."""
+    prompt_len = prompts.shape[1]
+    for i in range(prompt_len):
+        nxt, cache = serve_step(params, cache, prompts[:, i:i + 1],
+                                jnp.int32(i))
+    return nxt, cache
 
 
 def serve(args):
@@ -33,35 +52,31 @@ def serve(args):
 
     serve_step = jax.jit(S.make_serve_step(cfg), donate_argnums=(1,))
 
+    enc = None
     if cfg.arch_type == "audio":
         src = jnp.asarray(rng.normal(size=(B, 64, cfg.d_model)),
                           cfg.param_dtype)
         enc = encdec.encode(params, src, cfg, attn_chunk=64)
         cache = encdec.init_dec_cache(cfg, B, max_len, src.shape[1],
                                       cfg.param_dtype)
-        # precompute cross K/V from the encoder output
-        from ..models import layers as L
-        ck, cv = [], []
-        for i in range(cfg.n_layers):
-            bp = jax.tree.map(lambda x: x[i], params["dec_blocks"])
-            k = L.dense(bp["cross_attn"]["wk"], enc).reshape(
-                B, -1, cfg.n_kv_heads, cfg.hd)
-            v = L.dense(bp["cross_attn"]["wv"], enc).reshape(
-                B, -1, cfg.n_kv_heads, cfg.hd)
-            ck.append(k)
-            cv.append(v)
-        cache["cross_k"] = jnp.stack(ck).astype(cache["cross_k"].dtype)
-        cache["cross_v"] = jnp.stack(cv).astype(cache["cross_v"].dtype)
+        # cross K/V from the encoder output: one stacked einsum, all layers
+        ck, cv = encdec.cross_kv(params, enc, cfg)
+        cache["cross_k"] = ck.astype(cache["cross_k"].dtype)
+        cache["cross_v"] = cv.astype(cache["cross_v"].dtype)
     else:
         cache = T.init_cache(cfg, B, max_len, cfg.param_dtype)
 
-    # prefill by teacher-forcing the prompt through decode steps (fills the
-    # cache exactly; a bulk prefill-with-cache-export is a future fast path)
-    tok = prompts[:, :1]
     t0 = time.time()
-    for i in range(prompt_len):
-        nxt, cache = serve_step(params, cache, prompts[:, i:i + 1],
-                                jnp.int32(i))
+    if args.teacher_forced:
+        nxt, cache = teacher_forced_prefill(serve_step, params, cache,
+                                            prompts)
+    else:
+        bulk = jax.jit(S.make_bulk_prefill(cfg, attn_chunk=args.attn_chunk),
+                       donate_argnums=(3,) if enc is not None else (2,))
+        if enc is not None:
+            nxt, cache = bulk(params, prompts, enc, cache)
+        else:
+            nxt, cache = bulk(params, prompts, cache)
     generated = [nxt]
     for i in range(args.gen_len - 1):
         nxt, cache = serve_step(params, cache, generated[-1],
@@ -70,7 +85,8 @@ def serve(args):
     dt = time.time() - t0
     out = jnp.concatenate(generated, axis=1)
     toks = B * (prompt_len + args.gen_len - 1)
-    print(f"[serve] arch={cfg.name} batch={B} steps={toks} "
+    mode = "teacher-forced" if args.teacher_forced else "bulk"
+    print(f"[serve] arch={cfg.name} batch={B} prefill={mode} steps={toks} "
           f"{toks / dt:.1f} tok/s wall={dt:.2f}s")
     print("[serve] sample:", np.asarray(out[0])[:16].tolist())
     assert out.shape == (B, args.gen_len)
@@ -84,6 +100,9 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen-len", type=int, default=16)
+    ap.add_argument("--attn-chunk", type=int, default=64)
+    ap.add_argument("--teacher-forced", action="store_true",
+                    help="legacy per-token prefill (A/B baseline)")
     ap.add_argument("--seed", type=int, default=0)
     serve(ap.parse_args())
 

@@ -117,6 +117,17 @@ def tree_shardings(tree, mesh: Mesh, fsdp: Optional[tuple]):
                         tree_pspecs(tree, fsdp))
 
 
+def serving_buffer_shardings(bufs, mesh: Mesh):
+    """Shardings for the flat serving param buffers (launch/parambuf).
+
+    Decode reads the whole parameter set every step, and the flat layout
+    erases the per-tensor axes the `_RULES` table keys on — so the buffers
+    are REPLICATED across the mesh: every device holds a full copy and a
+    round-boundary hot-swap is one donated copy per device, no collective
+    on the decode critical path."""
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), bufs)
+
+
 # ---------------------------------------------------------------------------
 # scenario sweeps: shard an embarrassingly-parallel grid's leading axis
 # ---------------------------------------------------------------------------

@@ -134,6 +134,33 @@ def make_prefill_step(cfg: ModelConfig, *, n_groups: int = 1,
     return prefill
 
 
+def make_bulk_prefill(cfg: ModelConfig, *, n_groups: int = 1,
+                      attn_chunk: int = 1024):
+    """Bulk prefill-with-cache-export: the whole prompt in one chunked pass.
+
+    Dense/ssm/moe archs: ``(params, tokens [B,S], cache) ->
+    (next_token [B,1], filled cache)``; audio archs take the encoder output
+    too: ``(params, tokens, enc, cache)``.  The returned cache is positioned
+    at ``index=S`` — exactly what S teacher-forced ``serve_step`` calls
+    would have produced (tests/test_decode_consistency.py), at a fraction of
+    the dispatches (``benchmarks/serving.py`` measures the speedup).
+    """
+    if cfg.arch_type == "audio":
+        def bulk_prefill(params, tokens, enc, cache):
+            logits, cache = encdec.prefill_with_cache(
+                params, tokens, enc, cache, cfg, attn_chunk=attn_chunk)
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None], \
+                cache
+        return bulk_prefill
+
+    def bulk_prefill(params, tokens, cache):
+        logits, cache = T.prefill_with_cache(params, tokens, cache, cfg,
+                                             n_groups=n_groups,
+                                             attn_chunk=attn_chunk)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None], cache
+    return bulk_prefill
+
+
 def make_serve_step(cfg: ModelConfig):
     """One greedy decode step: (params, cache, token, index) ->
     (next_token [B,1], new_cache).

@@ -146,6 +146,61 @@ def init_dec_cache(cfg: ModelConfig, batch: int, seq: int, src_len: int,
     }
 
 
+def cross_kv(params, enc_out, cfg: ModelConfig):
+    """All decoder layers' cross-attention K/V in ONE stacked einsum over the
+    layer axis — replaces the per-layer Python loop (n_layers ``tree.map``
+    slices + small matmuls) with a single dense contraction.
+
+    enc_out [B,S_src,D] -> (k, v) each [n_layers, B, S_src, K, hd], matching
+    ``init_dec_cache``'s ``cross_k``/``cross_v`` layout.  Math parity with
+    the loop: a plain dense per layer (plus qkv bias when the config carries
+    one) — no qk_norm, exactly like ``decode_step``'s cached-K path.
+    """
+    B, Ssrc, _ = enc_out.shape
+    nL, K, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
+    ca = params["dec_blocks"]["cross_attn"]
+
+    def proj(wp):
+        y = jnp.einsum("bsd,ldo->lbso", enc_out, wp["w"])
+        if "b" in wp:
+            y = y + wp["b"][:, None, None, :]
+        return y.reshape(nL, B, Ssrc, K, hd)
+
+    return proj(ca["wk"]), proj(ca["wv"])
+
+
+def prefill_with_cache(params, tokens, enc_out, cache, cfg: ModelConfig, *,
+                       attn_chunk: int = 1024):
+    """Bulk decoder prefill: fill the self-attention cache in one chunked
+    pass and return the last position's logits.
+
+    tokens [B,S]; ``cache`` from ``init_dec_cache`` with ``cross_k``/
+    ``cross_v`` already populated (``cross_kv``).  Returns
+    (logits [B,V], cache ready for ``decode_step(..., index=S)``).
+    """
+    x = params["embed"][tokens]
+    B, S, _ = x.shape
+
+    def blk(h, inp):
+        bp, bself = inp
+        a = L.rms_norm(h, bp["norm1"], cfg.norm_eps)
+        a, k, v = L.attention_prefill(bp["self_attn"], a, cfg, window=None,
+                                      chunk=attn_chunk)
+        newc = L.fill_attn_cache(bself, k, v, seq_len=S)
+        h = h + a
+        c = L.rms_norm(h, bp["norm_x"], cfg.norm_eps)
+        h = h + cross_attention_fwd(bp["cross_attn"], c, enc_out, cfg,
+                                    chunk=attn_chunk)
+        m = L.rms_norm(h, bp["norm2"], cfg.norm_eps)
+        h = h + L.mlp(bp["mlp"], m)
+        return h, newc
+
+    h, new_self = jax.lax.scan(blk, x, (params["dec_blocks"], cache["self"]))
+    h = L.rms_norm(h, params["dec_norm"], cfg.norm_eps)
+    logits = h[:, -1, :] @ params["lm_head"]
+    return logits, {**cache, "self": new_self}
+
+
 def decode_step(params, cache, token, index, cfg: ModelConfig):
     """One decoder token against self-cache + precomputed cross K/V."""
     import math

@@ -19,6 +19,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .config import ModelConfig
 
@@ -178,15 +179,41 @@ def chunked_attention(q, k, v, *, window: Optional[int], chunk: int = 1024,
     return out
 
 
-def attention_fwd(p, x, cfg: ModelConfig, *, window: Optional[int],
-                  positions=None, chunk: int = 1024):
-    """Full training/prefill attention layer. x: [B,S,D] -> [B,S,D]."""
+def attention_prefill(p, x, cfg: ModelConfig, *, window: Optional[int],
+                      positions=None, chunk: int = 1024):
+    """Prefill attention layer that also exports the post-RoPE K/V for the
+    decode cache.  x: [B,S,D] -> (y [B,S,D], k [B,S,K,hd], v [B,S,K,hd]) —
+    the K/V are exactly what S teacher-forced decode steps would have
+    written (``attention_decode`` caches post-``_project_qkv`` tensors)."""
     B, S, _ = x.shape
     if positions is None:
         positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
     q, k, v = _project_qkv(p, x, cfg, positions)
     o = chunked_attention(q, k, v, window=window, chunk=min(chunk, S))
-    return dense(p["wo"], o.reshape(B, S, cfg.n_heads * cfg.hd))
+    return dense(p["wo"], o.reshape(B, S, cfg.n_heads * cfg.hd)), k, v
+
+
+def attention_fwd(p, x, cfg: ModelConfig, *, window: Optional[int],
+                  positions=None, chunk: int = 1024):
+    """Full training/prefill attention layer. x: [B,S,D] -> [B,S,D]."""
+    y, _, _ = attention_prefill(p, x, cfg, window=window, positions=positions,
+                                chunk=chunk)
+    return y
+
+
+def fill_attn_cache(cache: dict, k, v, *, seq_len: int) -> dict:
+    """Write bulk-prefill K/V [B,S,K,hd] into a decode cache as if S decode
+    steps had run: slot ``i % size`` holds position i's K/V, later positions
+    overwriting earlier ones in the ring buffer — only the last
+    ``min(S, size)`` positions survive, scattered at their ring slots."""
+    size = cache["k"].shape[1]
+    S = k.shape[1]
+    L = min(S, size)
+    slots = np.arange(S - L, S) % size
+    return {
+        "k": cache["k"].at[:, slots].set(k[:, S - L:].astype(cache["k"].dtype)),
+        "v": cache["v"].at[:, slots].set(v[:, S - L:].astype(cache["v"].dtype)),
+    }
 
 
 # ----------------------------------------------------------------------------

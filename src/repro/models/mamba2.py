@@ -65,14 +65,17 @@ def _causal_conv(x, w, b=None):
     return jax.nn.silu(out)
 
 
-def ssd_chunked(x, dt, A, Bm, Cm, chunk: int):
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int, return_state: bool = False):
     """Chunked SSD.
 
     x:  [B, S, nh, hp]   (conv'd + silu'd input)
     dt: [B, S, nh]       (post-softplus step sizes, fp32)
     A:  [nh]             (negative, fp32)
     Bm: [B, S, N], Cm: [B, S, N]
-    Returns y: [B, S, nh, hp] (x.dtype).
+    Returns y: [B, S, nh, hp] (x.dtype); with ``return_state`` also the
+    final recurrent state h_S [B, nh, N, hp] fp32 — the inter-chunk scan's
+    final carry, identical to the state the sequential ``mamba_decode``
+    recurrence reaches after S tokens (prefill cache export).
     """
     Bsz, S, nh, hp = x.shape
     N = Bm.shape[-1]
@@ -111,7 +114,7 @@ def ssd_chunked(x, dt, A, Bm, Cm, chunk: int):
         return h, h_before
 
     h0 = jnp.zeros((Bsz, nh, N, hp), jnp.float32)
-    _, h_prev = jax.lax.scan(
+    h_last, h_prev = jax.lax.scan(
         body, h0,
         (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
     h_prev = h_prev.transpose(1, 0, 2, 3, 4)                      # [B,nc,nh,N,hp]
@@ -121,6 +124,8 @@ def ssd_chunked(x, dt, A, Bm, Cm, chunk: int):
     y_off = jnp.einsum("bctn,bcth,bchnp->bcthp", Cc, in_decay, h_prev)
 
     y = (y_diag + y_off).reshape(Bsz, S, nh, hp)
+    if return_state:
+        return y.astype(x.dtype), h_last
     return y.astype(x.dtype)
 
 
@@ -188,3 +193,48 @@ def mamba_decode(p, u, cache: dict, cfg: ModelConfig):
     y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
     out = (y @ p["out_proj"])[:, None, :]
     return out, {"conv_x": tx, "conv_B": tB, "conv_C": tC, "ssm": h}
+
+
+def _conv_tail(raw, K: int):
+    """Last K-1 raw (pre-activation) projections [B,S,C] -> [B,K-1,C],
+    zero-padded on the left when S < K-1 — matching the implicit zero
+    history of ``_causal_conv`` and the zeros of ``init_mamba_cache``."""
+    B, S, C = raw.shape
+    t = raw[:, max(S - (K - 1), 0):, :]
+    pad = (K - 1) - t.shape[1]
+    if pad:
+        t = jnp.pad(t, ((0, 0), (pad, 0), (0, 0)))
+    return t
+
+
+def mamba_prefill(p, u, cfg: ModelConfig):
+    """Bulk prefill: the chunked-SSD forward plus a decode-cache export.
+
+    u: [B, S, D] -> (y [B,S,D], cache) where ``cache`` is exactly the state
+    S sequential ``mamba_decode`` steps would have left behind: conv tails
+    hold the last ``ssm_conv - 1`` raw projections and ``ssm`` is the
+    chunked scan's final fp32 recurrent state (cf. ``ssd_chunked``'s
+    ``return_state`` — the chunked/sequential duality).
+    """
+    B, S, D = u.shape
+    nh, hp = cfg.ssm_n_heads, cfg.ssm_head_dim
+    z = u @ p["wz"]
+    xr, Br, Cr = u @ p["wx"], u @ p["wB"], u @ p["wC"]
+    x = _causal_conv(xr, p["conv_x"], p["conv_bx"])
+    Bm = _causal_conv(Br, p["conv_B"])
+    Cm = _causal_conv(Cr, p["conv_C"])
+    dt = jax.nn.softplus((u @ p["wdt"]).astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xh = x.reshape(B, S, nh, hp)
+    Q = min(cfg.ssm_chunk, S)
+    while S % Q:                   # self-adjust to a divisor of S
+        Q //= 2
+    y, h = ssd_chunked(xh, dt, A, Bm, Cm, Q, return_state=True)
+    y = y + xh * p["D"][None, None, :, None].astype(x.dtype)
+    y = y.reshape(B, S, cfg.d_inner)
+    from .layers import rms_norm
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    K = cfg.ssm_conv
+    cache = {"conv_x": _conv_tail(xr, K), "conv_B": _conv_tail(Br, K),
+             "conv_C": _conv_tail(Cr, K), "ssm": h}
+    return y @ p["out_proj"], cache

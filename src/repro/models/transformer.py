@@ -16,7 +16,8 @@ import jax.numpy as jnp
 from .config import LayerSpec, ModelConfig
 from . import layers as L
 from .moe import init_moe, moe_apply
-from .mamba2 import (init_mamba, init_mamba_cache, mamba_decode, mamba_fwd)
+from .mamba2 import (init_mamba, init_mamba_cache, mamba_decode, mamba_fwd,
+                     mamba_prefill)
 
 
 # ----------------------------------------------------------------------------
@@ -64,6 +65,32 @@ def init_layer_cache(cfg: ModelConfig, spec: LayerSpec, batch: int, seq: int,
     if spec.kind == "attn":
         return L.init_attn_cache(cfg, batch, seq, spec.window, dtype)
     return init_mamba_cache(cfg, batch, dtype)
+
+
+def apply_layer_prefill(p, x, cache, cfg: ModelConfig, spec: LayerSpec, *,
+                        n_groups: int = 1, attn_chunk: int = 1024):
+    """Training-math forward over the whole prompt that also fills this
+    layer's decode cache (attn: ring-slot K/V scatter; mamba: conv tails +
+    final SSD state).  Mirrors ``apply_layer``; the FFN runs with the same
+    ``n_groups`` semantics as training (decode parity of MoE capacity drops
+    is a tolerance question, same as the teacher-forced path)."""
+    h = L.rms_norm(x, p["norm1"], cfg.norm_eps)
+    if spec.kind == "attn":
+        h, k, v = L.attention_prefill(p["mixer"], h, cfg, window=spec.window,
+                                      chunk=attn_chunk)
+        newc = L.fill_attn_cache(cache, k, v, seq_len=x.shape[1])
+    else:
+        h, newc = mamba_prefill(p["mixer"], h, cfg)
+        newc = jax.tree.map(lambda n, o: n.astype(o.dtype), newc, cache)
+    x = x + h
+    if "ffn" in p:
+        h = L.rms_norm(x, p["norm2"], cfg.norm_eps)
+        if spec.moe:
+            h, _ = moe_apply(p["ffn"], h, cfg, n_groups=n_groups)
+        else:
+            h = L.mlp(p["ffn"], h)
+        x = x + h
+    return x, newc
 
 
 def apply_layer_decode(p, x, cache, index, cfg: ModelConfig, spec: LayerSpec):
@@ -261,3 +288,31 @@ def prefill(params, tokens, cfg: ModelConfig, *, n_groups: int = 1,
     h, _ = backbone(params, x, cfg, n_groups=n_groups,
                     attn_chunk=attn_chunk, **bk)
     return unembed(params, h[:, -1:, :], cfg)[:, 0, :]
+
+
+def prefill_with_cache(params, tokens, cache, cfg: ModelConfig, *,
+                       n_groups: int = 1, attn_chunk: int = 1024):
+    """Bulk prefill: one chunked pass over the prompt that fills the decode
+    cache and returns the last position's logits.
+
+    tokens [B,S]; ``cache`` from ``init_cache`` (stacked [n_blocks][l{i}]).
+    Returns (logits [B,V], filled cache) — the cache is ready for
+    ``decode_step(..., index=S)``, replacing S teacher-forced decode steps
+    with a single program (``launch/serve.py``'s fast path).
+    """
+    pattern = cfg.block_pattern()
+    x = embed_tokens(params, tokens, cfg)
+
+    def blk(h, inp):
+        bp, bc = inp
+        newc = {}
+        for i, spec in enumerate(pattern):
+            h, c = apply_layer_prefill(bp[f"l{i}"], h, bc[f"l{i}"], cfg, spec,
+                                       n_groups=n_groups,
+                                       attn_chunk=attn_chunk)
+            newc[f"l{i}"] = c
+        return h, newc
+
+    h, new_cache = jax.lax.scan(blk, x, (params["blocks"], cache))
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    return unembed(params, h[:, -1:, :], cfg)[:, 0, :], new_cache

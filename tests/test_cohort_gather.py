@@ -248,14 +248,17 @@ def test_engine_spec_parsing_and_defaults():
         _tiny(engine="warp")
 
 
-def test_legacy_kwargs_map_to_engine_with_warning():
-    with pytest.warns(DeprecationWarning):
-        assert _tiny(batched=False).engine == "seq:jax"
-    with pytest.warns(DeprecationWarning):
-        assert _tiny(fused=True).engine == "fused:jax"
-    with pytest.warns(DeprecationWarning):
-        exp = _tiny(solver="np")
-    assert exp.engine == "batched:np"
+def test_legacy_kwargs_removed():
+    # the PR-6 ``batched=``/``solver=``/``fused=`` deprecation shims are
+    # gone: only the unified engine= spec constructs an experiment
+    with pytest.raises(TypeError):
+        _tiny(batched=False)
+    with pytest.raises(TypeError):
+        _tiny(fused=True)
+    with pytest.raises(TypeError):
+        _tiny(solver="np")
+    assert _tiny(engine="seq").engine == "seq:jax"
+    assert _tiny(engine="batched:np").engine == "batched:np"
 
 
 def test_draw_round_xs_eval_every_deprecated():

@@ -95,3 +95,177 @@ def test_whisper_decode_matches_forward():
     err = float(jnp.abs(full - dec).max())
     scale = float(jnp.abs(full).max())
     assert err < 2e-3 * max(scale, 1.0), f"whisper decode diverges ({err})"
+
+
+# ---------------------------------------------------------------------------
+# bulk prefill (launch serving hot path)
+# ---------------------------------------------------------------------------
+def _tweaked(name):
+    cfg = ARCHS[name].reduced()
+    if cfg.ssm_state:
+        cfg = dataclasses.replace(cfg, ssm_chunk=8)
+    if cfg.n_experts:
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    return cfg
+
+
+@pytest.mark.parametrize("name", ["qwen3-0.6b", "gemma3-12b", "mamba2-370m",
+                                  "jamba-v0.1-52b", "kimi-k2-1t-a32b"])
+def test_bulk_prefill_matches_teacher_forced(name):
+    """One chunked prefill pass must leave the cache exactly where S
+    teacher-forced decode steps leave it — subsequent decode continues
+    identically from either."""
+    cfg = _tweaked(name)
+    rng = np.random.default_rng(2)
+    B, S, EXTRA = 2, 24, 4
+    params = steps.init_fn(cfg)(jax.random.key(1))
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    serve_step = jax.jit(lambda p, c, t, i: T.decode_step(p, c, t, i, cfg))
+
+    cache_tf = T.init_cache(cfg, B, S + EXTRA, jnp.float32)
+    for i in range(S):
+        logits_tf, cache_tf = serve_step(params, cache_tf,
+                                         prompts[:, i:i + 1], jnp.int32(i))
+
+    bulk = jax.jit(steps.make_bulk_prefill(cfg, attn_chunk=8))
+    nxt, cache_bulk = bulk(params, prompts,
+                           T.init_cache(cfg, B, S + EXTRA, jnp.float32))
+
+    np.testing.assert_array_equal(
+        np.asarray(nxt[:, 0]), np.asarray(logits_tf[:, 0].argmax(-1)))
+    for pa, pb in zip(jax.tree.leaves(cache_tf), jax.tree.leaves(cache_bulk)):
+        c_err = float(jnp.abs(pa.astype(jnp.float32)
+                              - pb.astype(jnp.float32)).max())
+        assert c_err < 2e-3 * max(float(jnp.abs(pa).max()), 1.0), (name, c_err)
+    # continued decode from each cache stays token-identical
+    ta, tb = nxt, nxt
+    ca, cb = cache_tf, cache_bulk
+    for i in range(EXTRA):
+        la, ca = serve_step(params, ca, ta, jnp.int32(S + i))
+        lb, cb = serve_step(params, cb, tb, jnp.int32(S + i))
+        l_err = float(jnp.abs(la - lb).max())
+        assert l_err < 2e-3 * max(float(jnp.abs(la).max()), 1.0), (name, l_err)
+        ta = la.argmax(-1).astype(jnp.int32)
+        tb = lb.argmax(-1).astype(jnp.int32)
+        np.testing.assert_array_equal(np.asarray(ta), np.asarray(tb))
+
+
+def test_bulk_prefill_sliding_window_ring_buffer():
+    """Prompt longer than the window: the bulk fill must land the live
+    window into the ring-buffer slots exactly as per-token decode does."""
+    cfg = dataclasses.replace(ARCHS["gemma3-12b"].reduced(), sliding_window=8)
+    rng = np.random.default_rng(0)
+    B, S = 1, 24                       # cache size = S, window 8 wraps
+    params = steps.init_fn(cfg)(jax.random.key(0))
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    serve_step = jax.jit(lambda p, c, t, i: T.decode_step(p, c, t, i, cfg))
+    cache_tf = T.init_cache(cfg, B, S, jnp.float32)
+    for i in range(S):
+        logits_tf, cache_tf = serve_step(params, cache_tf,
+                                         prompts[:, i:i + 1], jnp.int32(i))
+    bulk = jax.jit(steps.make_bulk_prefill(cfg, attn_chunk=8))
+    nxt, cache_bulk = bulk(params, prompts, T.init_cache(cfg, B, S,
+                                                         jnp.float32))
+    for pa, pb in zip(jax.tree.leaves(cache_tf), jax.tree.leaves(cache_bulk)):
+        err = float(jnp.abs(pa.astype(jnp.float32)
+                            - pb.astype(jnp.float32)).max())
+        assert err < 2e-3 * max(float(jnp.abs(pa).max()), 1.0), err
+    np.testing.assert_array_equal(
+        np.asarray(nxt[:, 0]), np.asarray(logits_tf[:, 0].argmax(-1)))
+
+
+def test_whisper_cross_kv_matches_loop_and_bulk_prefill():
+    """The stacked-einsum cross-K/V equals the per-layer loop, and the bulk
+    decoder prefill continues decode identically to teacher forcing."""
+    from repro.models import layers as L
+    cfg = ARCHS["whisper-base"].reduced()
+    rng = np.random.default_rng(1)
+    B, S, SRC, EXTRA = 2, 12, 16, 4
+    params = steps.init_fn(cfg)(jax.random.key(2))
+    src = jnp.asarray(rng.normal(size=(B, SRC, cfg.d_model)), jnp.float32)
+    enc = encdec.encode(params, src, cfg, attn_chunk=8)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+
+    # (a) stacked einsum vs per-layer loop
+    ck, cv = encdec.cross_kv(params, enc, cfg)
+    for i in range(cfg.n_layers):
+        bp = jax.tree.map(lambda x: x[i], params["dec_blocks"])
+        k_ref = L.dense(bp["cross_attn"]["wk"], enc).reshape(
+            B, SRC, cfg.n_kv_heads, cfg.hd)
+        v_ref = L.dense(bp["cross_attn"]["wv"], enc).reshape(
+            B, SRC, cfg.n_kv_heads, cfg.hd)
+        np.testing.assert_allclose(np.asarray(ck[i]), np.asarray(k_ref),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(cv[i]), np.asarray(v_ref),
+                                   rtol=1e-5, atol=1e-5)
+
+    # (b) bulk prefill vs teacher forcing, continued decode token parity
+    def fresh_cache():
+        c = encdec.init_dec_cache(cfg, B, S + EXTRA, SRC, jnp.float32)
+        c["cross_k"], c["cross_v"] = ck, cv
+        return c
+
+    step = jax.jit(lambda p, c, t, i: encdec.decode_step(p, c, t, i, cfg))
+    cache_tf = fresh_cache()
+    for i in range(S):
+        logits_tf, cache_tf = step(params, cache_tf, tokens[:, i:i + 1],
+                                   jnp.int32(i))
+    bulk = jax.jit(steps.make_bulk_prefill(cfg, attn_chunk=8))
+    nxt, cache_bulk = bulk(params, tokens, enc, fresh_cache())
+    np.testing.assert_array_equal(
+        np.asarray(nxt[:, 0]), np.asarray(logits_tf[:, 0].argmax(-1)))
+    ta = tb = nxt
+    ca, cb = cache_tf, cache_bulk
+    for i in range(EXTRA):
+        la, ca = step(params, ca, ta, jnp.int32(S + i))
+        lb, cb = step(params, cb, tb, jnp.int32(S + i))
+        err = float(jnp.abs(la - lb).max())
+        assert err < 2e-3 * max(float(jnp.abs(la).max()), 1.0), err
+        ta = la.argmax(-1).astype(jnp.int32)
+        tb = lb.argmax(-1).astype(jnp.int32)
+        np.testing.assert_array_equal(np.asarray(ta), np.asarray(tb))
+
+
+# ---------------------------------------------------------------------------
+# hot-swap decode consistency (launch/continuous)
+# ---------------------------------------------------------------------------
+def test_hot_swap_decode_is_bit_identical_to_fresh_engine():
+    """Swapping params mid-stream must produce, from the swap step onward,
+    exactly the tokens a FRESH engine with the new params and the same cache
+    state would produce."""
+    from repro.launch.continuous import ContinuousServer
+    cfg = ARCHS["qwen3-0.6b"].reduced()
+    rng = np.random.default_rng(0)
+    B, S, PRE, POST = 2, 12, 5, 8
+    feats = {"audio": jnp.asarray(rng.normal(size=(B, 20, 11)), jnp.float32),
+             "text": jnp.asarray(rng.normal(size=(B, 30, 100)), jnp.float32)}
+    from repro.models import paper_models
+    fusion_a = paper_models.init_iemocap_model(jax.random.key(10))
+    fusion_b = paper_models.init_iemocap_model(jax.random.key(11))
+    lm = steps.init_fn(cfg)(jax.random.key(1))
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+
+    srv = ContinuousServer(cfg, lm, fusion_a, feats, max_len=S + PRE + POST)
+    srv.start(prompts)
+    for _ in range(PRE):
+        srv.decode_step()
+    st = srv.state()
+
+    # stream A: hot-swap to fusion_b, continue decoding
+    srv.swap(fusion_b)
+    toks_swapped = []
+    for _ in range(POST):
+        srv.decode_step()
+        toks_swapped.append(np.asarray(srv.token))
+
+    # stream B: FRESH engine built with fusion_b, same cache state restored
+    srv2 = ContinuousServer(cfg, lm, fusion_b, feats,
+                            max_len=S + PRE + POST)
+    srv2.load_state(st)
+    toks_fresh = []
+    for _ in range(POST):
+        srv2.decode_step()
+        toks_fresh.append(np.asarray(srv2.token))
+
+    np.testing.assert_array_equal(np.stack(toks_swapped),
+                                  np.stack(toks_fresh))

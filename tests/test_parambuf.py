@@ -1,0 +1,108 @@
+"""Flat donated param buffers (launch/parambuf): pack/unpack bit-exactness
+per architecture, mixed-dtype layouts, in-place donated swap semantics, and
+the flat checkpoint layout round-tripping against the pytree layout."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.launch import parambuf, steps
+
+
+def _tree_equal_bits(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        assert x.shape == y.shape and x.dtype == y.dtype
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_pack_unpack_roundtrip(name):
+    cfg = ARCHS[name].reduced()
+    params = steps.init_fn(cfg)(jax.random.key(0))
+    spec = parambuf.spec_of(params)
+    bufs = parambuf.pack(params, spec)
+    # reduced configs are all-float32: one buffer, total size = param count
+    n_leaves = len(jax.tree.leaves(params))
+    assert sum(n for _, n in spec.sizes) == sum(
+        int(np.prod(x.shape)) if x.ndim else 1
+        for x in jax.tree.leaves(params))
+    assert len(spec.leaves) == n_leaves
+    _tree_equal_bits(parambuf.unpack(bufs, spec), params)
+    # host mirror shares the exact element layout
+    np_bufs, np_spec = parambuf.pack_np(params)
+    assert np_spec.leaves == spec.leaves and np_spec.sizes == spec.sizes
+    for dt, n in spec.sizes:
+        np.testing.assert_array_equal(np.asarray(bufs[dt]), np_bufs[dt])
+    _tree_equal_bits(parambuf.unpack_np(np_bufs, np_spec), params)
+
+
+def test_mixed_dtype_tree():
+    tree = {
+        "w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+        "step": jnp.int32(7),
+        "half": jnp.ones((4,), jnp.bfloat16) * 1.5,
+        "nested": [jnp.zeros((2,), jnp.float32),
+                   jnp.array([1, 2], jnp.int32)],
+    }
+    spec = parambuf.spec_of(tree)
+    assert spec.n_buffers == 3            # float32 / int32 / bfloat16
+    sizes = dict(spec.sizes)
+    assert sizes["float32"] == 8 and sizes["int32"] == 3
+    assert sizes["bfloat16"] == 4
+    out = parambuf.unpack(parambuf.pack(tree, spec), spec)
+    _tree_equal_bits(out, tree)
+    # spec is hashable/static (jit closes over it)
+    hash(spec)
+
+
+def test_spec_from_shape_structs():
+    cfg = ARCHS["qwen3-0.6b"].reduced()
+    params = steps.init_fn(cfg)(jax.random.key(0))
+    spec_live = parambuf.spec_of(params)
+    spec_abs = parambuf.spec_of(jax.eval_shape(steps.init_fn(cfg),
+                                               jax.random.key(0)))
+    assert spec_abs.leaves == spec_live.leaves
+    assert spec_abs.sizes == spec_live.sizes
+
+
+def test_make_swap_in_place_and_stable():
+    cfg = dataclasses.replace(ARCHS["qwen3-0.6b"].reduced())
+    params = steps.init_fn(cfg)(jax.random.key(0))
+    spec = parambuf.spec_of(params)
+    bufs = parambuf.pack(params, spec)
+    swap = parambuf.make_swap(spec)
+
+    new_params = jax.tree.map(lambda x: x + 1.0, params)
+    old = bufs
+    bufs = swap(bufs, new_params)
+    _tree_equal_bits(parambuf.unpack(bufs, spec), new_params)
+    # donation consumed the old buffers: the swap reused the allocation
+    # instead of copying into a fresh one
+    for b in old.values():
+        assert b.is_deleted()
+    # repeated swaps retrace nothing
+    for i in range(3):
+        bufs = swap(bufs, jax.tree.map(lambda x: x * 0.5, new_params))
+    if hasattr(swap, "_cache_size"):
+        assert swap._cache_size() == 1
+
+
+def test_flat_checkpoint_matches_tree_layout(tmp_path):
+    from repro.checkpoint import (load_checkpoint, save_checkpoint,
+                                  save_flat_checkpoint)
+    cfg = ARCHS["mamba2-370m"].reduced()
+    params = steps.init_fn(cfg)(jax.random.key(3))
+    save_checkpoint(tmp_path / "tree", params, step=5)
+    save_flat_checkpoint(tmp_path / "flat", params, step=5)
+    t_tree, meta_t = load_checkpoint(tmp_path / "tree")
+    t_flat, meta_f = load_checkpoint(tmp_path / "flat")
+    assert meta_f["step"] == meta_t["step"] == 5
+    assert meta_f.get("layout") == "flat"
+    _tree_equal_bits(jax.tree.map(jnp.asarray, t_flat),
+                     jax.tree.map(jnp.asarray, t_tree))
+    _tree_equal_bits(jax.tree.map(jnp.asarray, t_flat), params)
