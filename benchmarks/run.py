@@ -38,6 +38,9 @@ Benchmarks:
                         the Gram-form ζ/δ tracker refresh vs the
                         direct-difference path
                         (see benchmarks/fusion_kernel.py)
+  backbone_rounds_*   — fused-round throughput + peak temp memory per model
+                        family (lstm-cnn / transformer / ssd) with remat on
+                        and off (see benchmarks/backbone_rounds.py)
 """
 from __future__ import annotations
 
@@ -330,6 +333,24 @@ def bench_batched_rounds(quick: bool):
              f"speedup={r['speedup']}x")
 
 
+def bench_backbone_rounds(quick: bool):
+    from benchmarks.backbone_rounds import run_benchmark
+    if TINY:
+        out = run_benchmark(["lstm-cnn", "transformer", "ssd"], [50],
+                            J=10, reps=2, dataset="iemocap", n_per_client=2)
+    elif quick:
+        out = run_benchmark(["lstm-cnn", "transformer", "ssd"], [50],
+                            J=10, reps=3, dataset="iemocap", n_per_client=2)
+    else:
+        out = run_benchmark(["lstm-cnn", "transformer", "ssd"], [50, 5000],
+                            J=10, reps=5, dataset="iemocap", n_per_client=2)
+    PAYLOADS["backbone_rounds"] = out
+    for r in out["per_round"]:
+        emit(f"backbone_rounds_{r['arch']}_K={r['K']}_remat={int(r['remat'])}",
+             r["ms_per_round"] * 1e3,
+             f"rounds_per_s={r['rounds_per_s']};temp_bytes={r['temp_bytes']}")
+
+
 def bench_serving(quick: bool):
     from benchmarks.serving import run_benchmark
     out = run_benchmark(tiny=TINY or quick)
@@ -381,6 +402,7 @@ def main() -> None:
         "jcsba_solver": bench_jcsba_solver,
         "fused_round": bench_fused_round,
         "fusion_kernel": bench_fusion_kernel,
+        "backbone_rounds": bench_backbone_rounds,
         "serving": bench_serving,
     }
     if args.v_frontier:

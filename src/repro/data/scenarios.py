@@ -30,6 +30,7 @@ from typing import Dict, NamedTuple, Optional, Sequence, Tuple
 import numpy as np
 
 from ..core import aggregation as agg
+from ..models.config import FL_ARCHS
 from ..wireless.cost import population_costs
 from .partition import (ClientStore, missing_counts, missing_masks,
                         normalize_omegas)
@@ -60,7 +61,12 @@ class ScenarioSpec:
       dropouts that still carry Eq.-12 weight), ``test_missing`` zeroes one
       modality of the *test* split (deployment-time missing sensor);
     * ``V`` — the Lyapunov drift penalty: the old V-grid is just this field
-      varying across rows.
+      varying across rows;
+    * ``arch`` — the model-family axis (``models.config.FL_ARCHS``):
+      ``"lstm-cnn"`` (the paper's submodels) or a transformer/SSD encoder
+      stack (``fl.client.make_adapter``).  Param pytrees differ per arch,
+      so one compiled sweep covers one arch — grid rows must agree
+      (Table 3 × {lstm-cnn, transformer, ssd} is three stacked grids).
     """
     name: str = ""
     dataset: str = "iemocap"
@@ -78,11 +84,15 @@ class ScenarioSpec:
     test_missing: Optional[str] = None
     V: float = 1.0
     seed: int = 0
+    arch: str = "lstm-cnn"
 
     def __post_init__(self):
         if self.dataset not in DATASET_SHAPES:
             raise ValueError(f"unknown dataset {self.dataset!r}; "
                              f"choose from {sorted(DATASET_SHAPES)}")
+        if self.arch not in FL_ARCHS:
+            raise ValueError(f"unknown arch {self.arch!r}; "
+                             f"choose from {FL_ARCHS}")
         if self.split not in SPLIT_LAWS:
             raise ValueError(f"unknown split {self.split!r}; "
                              f"choose from {SPLIT_LAWS}")
@@ -116,6 +126,8 @@ class ScenarioSpec:
             return self.name
         om = "/".join(f"{w:g}" for w in self.omega)
         bits = [self.split, f"om={om}", f"V={self.V:g}"]
+        if self.arch != "lstm-cnn":
+            bits.append(self.arch)
         if self.noise_sigma:
             bits.append(f"noise={self.noise_sigma:g}")
         if self.erasure_rate:
@@ -262,10 +274,10 @@ def stack_scenarios(specs: Sequence[ScenarioSpec], params) -> ScenarioGrid:
     for s in specs[1:]:
         same = (s.dataset == s0.dataset and s.K == s0.K
                 and s.n_per_client == s0.n_per_client
-                and s.n_test == s0.n_test)
+                and s.n_test == s0.n_test and s.arch == s0.arch)
         if not same:
             raise ValueError(
-                f"grid rows must share dataset/K/n_per_client/n_test; "
+                f"grid rows must share dataset/K/n_per_client/n_test/arch; "
                 f"{s.label()!r} differs from {s0.label()!r}")
     built = [build_scenario(s, params) for s in specs]
     stores = jax.tree.map(lambda *xs: np.stack(xs),

@@ -5,14 +5,26 @@ One epoch of batch gradient descent (BGD) on the local dataset per round, per
 the client's available modalities are updated (missing submodels are neither
 computed nor uploaded — Eq. 7 and the discussion below it).
 
-``PaperModelAdapter`` binds this to the paper's LSTM/CNN submodels; the same
-interface drives the pods-as-clients mode for LM-scale models
-(examples/federated_pods.py).
+The paper's analysis (Theorem 1, Eq. 12) is architecture-agnostic, and so is
+this module: ``ModelAdapter`` owns every piece of the local update that does
+*not* depend on the architecture (the single-client and whole-cohort BGD
+steps, the loss-backend selection, optional per-client remat, eval), while
+subclasses supply only ``init_global`` and ``modal_logits``:
+
+* ``PaperModelAdapter`` — the paper's faithful LSTM/CNN submodels
+  (models/paper_models.py);
+* ``BackboneAdapter`` — transformer- or SSD-backed unimodal encoders built
+  from the LM-scale blocks (models/multimodal.py::encoder_apply over
+  ``ENCODER_PRESETS``), optionally routing the mixers through the
+  flash_attention / ssd_scan Pallas kernels (``use_kernels=True``).
+
+``make_adapter`` maps the scenario grid's architecture axis
+(``ScenarioSpec.arch`` ∈ ``models.config.FL_ARCHS``) to the right class.
 """
 from __future__ import annotations
 
 import functools
-from typing import Dict, Mapping, Optional, Sequence, Tuple
+from typing import Dict, Mapping, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -21,25 +33,32 @@ import numpy as np
 from ..core import fusion
 from ..core.trees import tree_sq_dist
 from ..data.partition import ClientData
+from ..data.scenarios import DATASET_SHAPES
 from ..kernels.fusion_loss import ops as fusion_kops
+from ..models import multimodal as mm
 from ..models import paper_models as pm
+from ..models.config import FL_ARCHS, encoder_config
 from .eval import eval_metrics
 
-_eval_jit = jax.jit(eval_metrics)
 
+class ModelAdapter:
+    """Architecture-agnostic local-update machinery (Algorithm 1, ll. 4-6).
 
-class PaperModelAdapter:
-    """Decision-fusion multimodal model made of the paper's submodels."""
+    Subclasses define the model family via ``init_global`` (global param
+    pytree) and ``modal_logits`` (per-modality decision logits); everything
+    else — BGD step, cohort vmap, loss backend, eval — is shared.  Instances
+    are *value objects*: ``__eq__``/``__hash__`` derive from ``_key()`` so
+    equal-valued adapters are interchangeable and share the ``lru_cache``-d
+    compiled steps (all behavior is a pure function of the key).
+    """
 
-    # Default pre-set modal weights v_m (Eq. 3).  The LSTM submodels need a
-    # stronger unimodal-loss pull than the CNN to converge under the shared
-    # BGD step size η — this is exactly the role the paper assigns v_m
-    # ("a pre-set modal weight"); calibration in EXPERIMENTS.md §Repro.
-    DEFAULT_V = {"audio": 6.0, "text": 4.0, "image": 1.0}
+    #: default pre-set modal weights v_m (Eq. 3); subclasses override
+    DEFAULT_V: Dict[str, float] = {"audio": 1.0, "text": 1.0, "image": 1.0}
 
     def __init__(self, dataset_name: str, eta: float = 0.05,
                  v_weights: Optional[Mapping[str, float]] = None,
-                 dropout: float = 0.1, loss_backend: str = "xla"):
+                 dropout: float = 0.1, loss_backend: str = "xla",
+                 remat: bool = False):
         if loss_backend not in ("xla", "pallas"):
             raise ValueError(
                 f"unknown loss_backend {loss_backend!r}; expected "
@@ -51,7 +70,40 @@ class PaperModelAdapter:
                               else v_weights)
         self.dropout = dropout
         self.loss_backend = loss_backend
+        self.remat = remat
 
+    # ------------------------------------------------------------------
+    # value semantics (hash/eq contract: equal keys <=> equal behavior)
+    # ------------------------------------------------------------------
+    def _key(self) -> tuple:
+        return (type(self).__name__, self.dataset_name, self.eta,
+                self.dropout, self.loss_backend, self.remat,
+                tuple(sorted(self.v_weights.items())))
+
+    def __hash__(self):   # lru_cache on methods needs a hashable self
+        return hash(self._key())
+
+    def __eq__(self, other):
+        if not isinstance(other, ModelAdapter):
+            return NotImplemented
+        return self._key() == other._key()
+
+    # ------------------------------------------------------------------
+    # the architecture: subclasses implement these two
+    # ------------------------------------------------------------------
+    def init_global(self, key) -> Dict[str, dict]:
+        """Global model: {modality: param pytree}."""
+        raise NotImplementedError
+
+    def modal_logits(self, params, inputs: dict, *, dropout_rng=None):
+        """Per-modality [B, C] logits for the modalities in ``inputs``."""
+        raise NotImplementedError
+
+    def eval_logits(self, params, inputs: dict):
+        """Deterministic (no-dropout) logits for test-set evaluation."""
+        return self.modal_logits(params, inputs)
+
+    # ------------------------------------------------------------------
     def _loss_fn(self, v_weights):
         """The H_k = F + Σ v_m·G_m computation, backend-selected: the plain
         XLA ``core.fusion.multimodal_loss`` or the one-pass Pallas kernel
@@ -70,14 +122,6 @@ class PaperModelAdapter:
         return loss
 
     # ------------------------------------------------------------------
-    def init_global(self, key) -> Dict[str, dict]:
-        if self.dataset_name == "crema_d":
-            return pm.init_crema_model(key)
-        if self.dataset_name == "iemocap":
-            return pm.init_iemocap_model(key)
-        raise ValueError(self.dataset_name)
-
-    # ------------------------------------------------------------------
     @functools.lru_cache(maxsize=32)
     def _update_fn(self, mods: Tuple[str, ...]):
         v_weights = {m: self.v_weights.get(m, 1.0) for m in mods}
@@ -86,10 +130,12 @@ class PaperModelAdapter:
         @jax.jit
         def step(params, feats, labels, rng):
             def loss(p):
-                logits = pm.modal_logits(p, feats, dropout_rng=rng)
+                logits = self.modal_logits(p, feats, dropout_rng=rng)
                 total, met = loss_impl(logits, labels)
                 return total, met["F"]
 
+            if self.remat:
+                loss = jax.checkpoint(loss)
             (total, F), grads = jax.value_and_grad(loss, has_aux=True)(params)
             new = jax.tree.map(lambda p, g: p - self.eta * g, params, grads)
             return new, grads, total, F
@@ -119,7 +165,11 @@ class PaperModelAdapter:
 
         The host batched path jits it directly (``_batched_update_fn``); the
         fused round engine (fl/fused_round.py) inlines it into the single
-        per-round program, so both execute the identical computation."""
+        per-round program, so both execute the identical computation.  With
+        ``remat=True`` each client's loss is ``jax.checkpoint``-wrapped, so
+        the vmapped backward recomputes per-client forward activations
+        instead of holding [K, ...] stacks of them live — the memory lever
+        for the large-backbone adapters (BENCH_backbone_rounds.json)."""
         v_weights = {m: self.v_weights.get(m, 1.0) for m in mods}
         eta = self.eta
         loss_impl = self._loss_fn(v_weights)
@@ -129,11 +179,13 @@ class PaperModelAdapter:
                 rng = jax.random.key(seed_k)
 
                 def loss(p):
-                    logits = pm.modal_logits(p, feats_k, dropout_rng=rng)
+                    logits = self.modal_logits(p, feats_k, dropout_rng=rng)
                     total, met = loss_impl(logits, labels_k, avail=avail_k,
                                            sample_mask=smask_k)
                     return total, met["F"]
 
+                if self.remat:
+                    loss = jax.checkpoint(loss)
                 (total, _), grads = jax.value_and_grad(
                     loss, has_aux=True)(params)
                 new = jax.tree.map(lambda p, g: p - eta * g, params, grads)
@@ -182,20 +234,101 @@ class PaperModelAdapter:
             labels, sample_mask, avail_f, seeds_j)
 
     # ------------------------------------------------------------------
-    def evaluate(self, params: Mapping[str, dict], test) -> Dict[str, float]:
+    @functools.lru_cache(maxsize=2)
+    def _eval_fn(self):
         # the one test-metric computation, shared with the fused round
         # engine's device-resident eval (fl/eval.py single-sources it);
         # jit specialisation per modality set / shapes is jax's own cache
+        return jax.jit(functools.partial(eval_metrics,
+                                         logits_fn=self.eval_logits))
+
+    def evaluate(self, params: Mapping[str, dict], test) -> Dict[str, float]:
         mods = tuple(sorted(test.features.keys()))
         feats = {m: jnp.asarray(test.features[m]) for m in mods}
         labels = jnp.asarray(test.labels)
-        out = _eval_jit({m: params[m] for m in mods}, feats, labels)
+        out = self._eval_fn()({m: params[m] for m in mods}, feats, labels)
         return {k: float(v) for k, v in out.items()}
 
-    def __hash__(self):   # lru_cache on methods needs a hashable self
-        return hash((self.dataset_name, self.eta, self.dropout,
-                     self.loss_backend,
-                     tuple(sorted(self.v_weights.items()))))
 
-    def __eq__(self, other):
-        return self is other
+class PaperModelAdapter(ModelAdapter):
+    """Decision-fusion multimodal model made of the paper's submodels."""
+
+    # Default pre-set modal weights v_m (Eq. 3).  The LSTM submodels need a
+    # stronger unimodal-loss pull than the CNN to converge under the shared
+    # BGD step size η — this is exactly the role the paper assigns v_m
+    # ("a pre-set modal weight"); calibration in EXPERIMENTS.md §Repro.
+    DEFAULT_V = {"audio": 6.0, "text": 4.0, "image": 1.0}
+
+    def init_global(self, key) -> Dict[str, dict]:
+        if self.dataset_name == "crema_d":
+            return pm.init_crema_model(key)
+        if self.dataset_name == "iemocap":
+            return pm.init_iemocap_model(key)
+        raise ValueError(self.dataset_name)
+
+    def modal_logits(self, params, inputs: dict, *, dropout_rng=None):
+        return pm.modal_logits(params, inputs, dropout_rng=dropout_rng,
+                               dropout=self.dropout)
+
+
+class BackboneAdapter(ModelAdapter):
+    """Transformer- or SSD-backed unimodal encoders under decision fusion.
+
+    Each modality's feature stack runs through a small sequence encoder
+    built from the LM-scale blocks (``models.config.ENCODER_PRESETS``) to
+    C-class logits; fusion/loss/aggregation are the shared machinery — the
+    scenario grid's architecture axis.  ``use_kernels=True`` routes the
+    mixers through the flash_attention / ssd_scan Pallas kernels (custom
+    VJPs recompute the backward via the XLA reference path, so the kernels
+    sit on the *training* hot path under the cohort vmap).
+    """
+
+    DEFAULT_V = {"audio": 1.0, "text": 1.0, "image": 1.0}
+
+    def __init__(self, dataset_name: str, arch: str = "transformer",
+                 use_kernels: bool = False, **kw):
+        super().__init__(dataset_name, **kw)
+        self.arch = arch
+        self.use_kernels = use_kernels
+        self.cfg = encoder_config(arch)
+
+    def _key(self) -> tuple:
+        return super()._key() + (self.arch, self.use_kernels)
+
+    @property
+    def _impl(self) -> str:
+        return "pallas" if self.use_kernels else "xla"
+
+    def init_global(self, key) -> Dict[str, dict]:
+        shapes, n_classes = DATASET_SHAPES[self.dataset_name]
+        mods = tuple(sorted(shapes))
+        keys = jax.random.split(key, len(mods))
+        return {m: mm.init_encoder(
+                    k, int(np.prod(shapes[m][1:], dtype=np.int64)),
+                    n_classes, self.cfg)
+                for m, k in zip(mods, keys)}
+
+    def modal_logits(self, params, inputs: dict, *, dropout_rng=None):
+        out = {}
+        for m in sorted(inputs):
+            rng = None
+            if dropout_rng is not None:
+                # same global per-modality constants as the paper models, so
+                # a modality-subset call and the full masked stack draw
+                # identical masks (pm.MODALITY_INDEX rationale)
+                rng = jax.random.fold_in(dropout_rng, pm.MODALITY_INDEX[m])
+            out[m] = mm.encoder_apply(
+                params[m], inputs[m], self.cfg, dropout_rng=rng,
+                dropout=self.dropout, remat=self.remat, impl=self._impl)
+        return out
+
+
+def make_adapter(dataset_name: str, arch: str = "lstm-cnn",
+                 use_kernels: bool = False, **kw) -> ModelAdapter:
+    """Adapter for one point of the architecture axis (``FL_ARCHS``)."""
+    if arch == "lstm-cnn":
+        return PaperModelAdapter(dataset_name, **kw)
+    if arch not in FL_ARCHS:
+        raise ValueError(f"unknown arch {arch!r}; choose from {FL_ARCHS}")
+    return BackboneAdapter(dataset_name, arch=arch, use_kernels=use_kernels,
+                           **kw)

@@ -44,12 +44,18 @@ def metric_keys(mods) -> Tuple[str, ...]:
 
 
 def eval_metrics(params: Mapping[str, dict], feats: Mapping[str, jax.Array],
-                 labels: jax.Array) -> Dict[str, jax.Array]:
+                 labels: jax.Array, *, logits_fn=None) -> Dict[str, jax.Array]:
     """Test-split metrics as f32 scalars: Eq. 1 fused accuracy (key
     ``multimodal``), fused cross-entropy (``loss``) and one unimodal
     accuracy per modality present in ``feats``.  Pure and traced-safe — the
-    fused round engine inlines it; the host adapter jits it."""
-    logits = pm.modal_logits({m: params[m] for m in feats}, dict(feats))
+    fused round engine inlines it; the host adapter jits it.
+
+    ``logits_fn(params, feats) -> {modality: [B, C]}`` selects the model
+    family (``ModelAdapter.eval_logits``); the default is the paper's
+    LSTM/CNN forward, keeping existing callers byte-identical."""
+    if logits_fn is None:
+        logits_fn = pm.modal_logits
+    logits = logits_fn({m: params[m] for m in feats}, dict(feats))
     fused = fusion.fuse_logits(logits)
     out = {"multimodal": fusion.accuracy(fused, labels),
            "loss": fusion.softmax_xent(fused, labels)}
@@ -73,7 +79,8 @@ def device_test_set(test_ds) -> Tuple[Dict[str, jax.Array], jax.Array]:
     return feats, jnp.asarray(test_ds.labels)
 
 
-def eval_metrics_stacked(stacked_params, feats, labels):
+def eval_metrics_stacked(stacked_params, feats, labels, *, logits_fn=None):
     """``eval_metrics`` vmapped over a leading scenario axis of ``params`` —
     evaluates e.g. every V-grid row's final model in one device call."""
-    return jax.vmap(lambda p: eval_metrics(p, feats, labels))(stacked_params)
+    return jax.vmap(lambda p: eval_metrics(p, feats, labels,
+                                           logits_fn=logits_fn))(stacked_params)

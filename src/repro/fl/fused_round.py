@@ -288,6 +288,9 @@ class FusedRoundEngine:
         self._store = exp._get_store()
         self._init_params = jax.tree.map(jnp.asarray, exp.init_params)
         self._cohort = exp.adapter.cohort_step(tuple(self.mods))
+        # the adapter's deterministic forward backs the in-scan eval, so the
+        # fused curve matches adapter.evaluate for every model family
+        self._eval_logits = exp.adapter.eval_logits
 
         # device-resident eval context: the held-out split lives on device
         # for the engine's lifetime; rounds flagged by xs.eval_flag run the
@@ -354,6 +357,7 @@ class FusedRoundEngine:
         self._global_params0 = gp
         self._init_params = jax.tree.map(jnp.asarray, gp)
         self._cohort = adapter.cohort_step(tuple(self.mods))
+        self._eval_logits = adapter.eval_logits
         # eval context: client 0's shard stands in as the held-out split —
         # population benches never flag an eval round, but lax.cond still
         # traces both branches, so the program needs *some* test tensors
@@ -555,7 +559,7 @@ class FusedRoundEngine:
             (self._test_feats, self._test_labels)
         metrics = lax.cond(
             xs.eval_flag,
-            lambda p: eval_metrics(p, tf, tl),
+            lambda p: eval_metrics(p, tf, tl, logits_fn=self._eval_logits),
             lambda p: nan_metrics(tf),
             new_params)
 

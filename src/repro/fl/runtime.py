@@ -83,7 +83,7 @@ from ..wireless.channel import Channel
 from ..wireless.lyapunov import EnergyQueues
 from ..wireless.params import MODALITY_PROFILES, WirelessParams
 from ..wireless.schedulers import (ScheduleContext, Scheduler, make_scheduler)
-from .client import PaperModelAdapter
+from .client import make_adapter
 
 
 def jnp_or_np(x):
@@ -133,6 +133,43 @@ class RoundRecord:
 #: valid ``engine=`` loop names, in increasing fusion order
 ENGINE_LOOPS = ("seq", "batched", "fused")
 
+#: valid "+"-joined engine-spec backend tokens after the ":" — JCSBA solver
+#: parity backends ('np'/'seq'), the Pallas hot path ('pallas': custom-VJP
+#: fusion loss, plus kernel-backed mixers for the backbone adapters) and
+#: per-client activation checkpointing ('remat')
+ENGINE_TOKENS = ("jax", "np", "seq", "pallas", "remat")
+
+
+def parse_engine(engine: str):
+    """``"<loop>[:<token>[+<token>...]]"`` → (loop, solver_backend,
+    loss_backend, remat, use_kernels, canonical spec).
+
+    Examples: ``"fused"``, ``"batched:np"``, ``"fused:pallas"``,
+    ``"fused:remat"``, ``"fused:pallas+remat"``."""
+    loop, _, rest = engine.partition(":")
+    if loop not in ENGINE_LOOPS:
+        raise ValueError(
+            f"unknown engine {engine!r}; expected "
+            f"'seq' | 'batched' | 'fused' with an optional "
+            f"':<token>[+<token>...]' suffix from {ENGINE_TOKENS} "
+            f"(a jcsba solver backend 'np'/'seq', 'pallas' for the "
+            f"kernel-backed hot path, 'remat' for per-client "
+            f"activation checkpointing)")
+    tokens = [t for t in rest.split("+") if t] if rest else []
+    for t in tokens:
+        if t not in ENGINE_TOKENS:
+            raise ValueError(
+                f"unknown engine token {t!r} in {engine!r}; "
+                f"choose from {ENGINE_TOKENS}")
+    solver = [t for t in tokens if t in ("np", "seq")]
+    if len(solver) > 1:
+        raise ValueError(f"conflicting solver backends in {engine!r}")
+    solver_backend = solver[0] if solver else "jax"
+    loss_backend = "pallas" if "pallas" in tokens else "xla"
+    remat = "remat" in tokens
+    canon = loop + (":" + "+".join(tokens) if tokens else ":jax")
+    return loop, solver_backend, loss_backend, remat, "pallas" in tokens, canon
+
 
 class MFLExperiment:
     def __init__(self, dataset: str = "crema_d", scheduler: str = "jcsba",
@@ -141,22 +178,16 @@ class MFLExperiment:
                  eta: float = 0.05, V: float = 1.0, seed: int = 0,
                  params: Optional[WirelessParams] = None,
                  scheduler_kwargs: Optional[dict] = None,
-                 eval_every: int = 1, engine: str = "batched"):
-        loop, _, backend = engine.partition(":")
-        backend = backend or "jax"
-        if loop not in ENGINE_LOOPS:
-            raise ValueError(
-                f"unknown engine {engine!r}; expected "
-                f"'seq' | 'batched' | 'fused' with an optional "
-                f"':<backend>' suffix (a jcsba solver backend 'np'/'seq', "
-                f"or 'pallas' for the kernel-backed loss)")
-        # backend token routing: 'pallas' selects the custom-VJP Pallas
-        # fusion-loss on the client BGD hot path (kernels/fusion_loss) and
-        # leaves the JCSBA solver on its traced 'jax' core; 'np'/'seq'
-        # remain the host-side JCSBA parity solvers on the XLA loss.
-        loss_backend = "pallas" if backend == "pallas" else "xla"
-        solver_backend = "jax" if backend == "pallas" else backend
-        self.engine = f"{loop}:{backend}"
+                 eval_every: int = 1, engine: str = "batched",
+                 arch: str = "lstm-cnn"):
+        # engine-spec token routing: 'pallas' selects the custom-VJP Pallas
+        # fusion-loss on the client BGD hot path (kernels/fusion_loss) —
+        # and, for the backbone adapters, the kernel-backed mixers too —
+        # leaving the JCSBA solver on its traced 'jax' core; 'np'/'seq'
+        # remain the host-side JCSBA parity solvers on the XLA loss; 'remat'
+        # activation-checkpoints each client's loss in the cohort step.
+        (loop, solver_backend, loss_backend, remat, use_kernels,
+         self.engine) = parse_engine(engine)
         self.rng = np.random.default_rng(seed)
         self.params = params or WirelessParams(K=K)
         self.eval_every = eval_every
@@ -178,8 +209,12 @@ class MFLExperiment:
         self.data_sizes = [c.size for c in self.clients]
         self.profile = MODALITY_PROFILES[dataset]
 
-        self.adapter = PaperModelAdapter(dataset, eta=eta,
-                                         loss_backend=loss_backend)
+        # the model-family axis: 'lstm-cnn' (the paper's submodels) or a
+        # transformer/SSD encoder stack (fl/client.py::make_adapter)
+        self.arch = arch
+        self.adapter = make_adapter(dataset, arch, eta=eta,
+                                    loss_backend=loss_backend, remat=remat,
+                                    use_kernels=use_kernels)
         self.global_params = self.adapter.init_global(jax.random.key(seed))
         self.init_params = jax.tree.map(lambda x: x, self.global_params)
 
@@ -201,7 +236,7 @@ class MFLExperiment:
         if self.fused and self.scheduler.policy is None:
             raise ValueError(
                 f"engine='fused' requires a traced scheduling policy; "
-                f"scheduler={scheduler!r} with backend={backend!r} runs "
+                f"scheduler={scheduler!r} with backend={solver_backend!r} runs "
                 f"host-side only (every scheduler has a traced core — "
                 f"jcsba/random/round_robin/selection/dropout — except "
                 f"JCSBA's np/seq parity backends)")

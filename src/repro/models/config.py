@@ -136,3 +136,40 @@ class ModelConfig:
         )
         small.update(overrides)
         return dataclasses.replace(self, **small)
+
+
+# ---------------------------------------------------------------------------
+# unimodal *encoder* presets for the FL backbone adapter (fl/client.py)
+# ---------------------------------------------------------------------------
+#: backbone architectures the FL harness can train.  "lstm-cnn" is the
+#: paper's faithful submodel pair (models/paper_models.py); the rest map
+#: each modality's feature stack through a small encoder built from the
+#: LM-scale blocks below (models/multimodal.py::encoder_apply) — the
+#: scenario grid's architecture axis (data/scenarios.py).
+ENCODER_ARCHS = ("transformer", "ssd")
+FL_ARCHS = ("lstm-cnn",) + ENCODER_ARCHS
+
+#: per-arch encoder stacks sized for federated clients (paper-model scale,
+#: not LM scale): f32, 2 blocks, d_model 32.  ``ssm_chunk=8`` divides every
+#: dataset's feature time axis (audio T=32, text T=24, image rows T=32 —
+#: data/scenarios.py::DATASET_SHAPES), the ``ssd_chunked`` contract.
+ENCODER_PRESETS = {
+    "transformer": ModelConfig(
+        name="fl-enc-transformer", arch_type="dense", n_layers=2,
+        d_model=32, n_heads=4, n_kv_heads=4, head_dim=8, d_ff=64,
+        vocab_size=0, dtype="float32"),
+    "ssd": ModelConfig(
+        name="fl-enc-ssd", arch_type="ssm", n_layers=2,
+        d_model=32, n_heads=4, n_kv_heads=4, head_dim=8, d_ff=0,
+        vocab_size=0, ssm_state=16, ssm_head_dim=8, ssm_expand=2,
+        ssm_conv=4, ssm_chunk=8, dtype="float32"),
+}
+
+
+def encoder_config(arch: str) -> ModelConfig:
+    """The ``ModelConfig`` behind one FL encoder architecture."""
+    try:
+        return ENCODER_PRESETS[arch]
+    except KeyError:
+        raise ValueError(f"unknown encoder arch {arch!r}; "
+                         f"choose from {ENCODER_ARCHS}") from None

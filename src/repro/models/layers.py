@@ -14,6 +14,7 @@ Attention notes
 """
 from __future__ import annotations
 
+import functools
 import math
 from typing import Optional
 
@@ -179,25 +180,62 @@ def chunked_attention(q, k, v, *, window: Optional[int], chunk: int = 1024,
     return out
 
 
+# ----------------------------------------------------------------------------
+# Pallas-backed causal attention with an XLA-recompute backward.  The TPU
+# kernel (repro.kernels.flash_attention, interpret mode off-TPU) has no
+# backward kernel, so ``pallas_attention`` pairs the kernel forward with a
+# custom VJP that replays the bit-matching chunked-jnp path under ``jax.vjp``
+# — gradients are exactly the XLA path's (the two forwards agree in fp32,
+# tests/test_kernels.py), which is what lets the FL backbone adapter put the
+# kernel on the *training* hot path (fl/client.py, attention_impl="pallas").
+# ----------------------------------------------------------------------------
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def pallas_attention(q, k, v, window: Optional[int], chunk: int):
+    """Causal attention via the flash-attention kernel; layouts as
+    ``chunked_attention`` (q [B,Sq,H,hd], k/v [B,Sk,K,hd])."""
+    from ..kernels.flash_attention.ops import flash_attention
+    return flash_attention(q, k, v, causal=True, window=window)
+
+
+def _pallas_attention_fwd(q, k, v, window, chunk):
+    return pallas_attention(q, k, v, window, chunk), (q, k, v)
+
+
+def _pallas_attention_bwd(window, chunk, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: chunked_attention(q_, k_, v_, window=window,
+                                             chunk=chunk), q, k, v)
+    return vjp(g)
+
+
+pallas_attention.defvjp(_pallas_attention_fwd, _pallas_attention_bwd)
+
+
 def attention_prefill(p, x, cfg: ModelConfig, *, window: Optional[int],
-                      positions=None, chunk: int = 1024):
+                      positions=None, chunk: int = 1024, impl: str = "xla"):
     """Prefill attention layer that also exports the post-RoPE K/V for the
     decode cache.  x: [B,S,D] -> (y [B,S,D], k [B,S,K,hd], v [B,S,K,hd]) —
     the K/V are exactly what S teacher-forced decode steps would have
-    written (``attention_decode`` caches post-``_project_qkv`` tensors)."""
+    written (``attention_decode`` caches post-``_project_qkv`` tensors).
+    ``impl="pallas"`` routes the score/softmax/value contraction through the
+    flash-attention kernel (``pallas_attention`` above)."""
     B, S, _ = x.shape
     if positions is None:
         positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
     q, k, v = _project_qkv(p, x, cfg, positions)
-    o = chunked_attention(q, k, v, window=window, chunk=min(chunk, S))
+    if impl == "pallas":
+        o = pallas_attention(q, k, v, window, min(chunk, S))
+    else:
+        o = chunked_attention(q, k, v, window=window, chunk=min(chunk, S))
     return dense(p["wo"], o.reshape(B, S, cfg.n_heads * cfg.hd)), k, v
 
 
 def attention_fwd(p, x, cfg: ModelConfig, *, window: Optional[int],
-                  positions=None, chunk: int = 1024):
+                  positions=None, chunk: int = 1024, impl: str = "xla"):
     """Full training/prefill attention layer. x: [B,S,D] -> [B,S,D]."""
     y, _, _ = attention_prefill(p, x, cfg, window=window, positions=positions,
-                                chunk=chunk)
+                                chunk=chunk, impl=impl)
     return y
 
 

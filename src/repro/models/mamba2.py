@@ -18,6 +18,7 @@ Decode keeps a constant-size cache: depthwise-conv tails + SSM state
 """
 from __future__ import annotations
 
+import functools
 import math
 
 import jax
@@ -129,8 +130,38 @@ def ssd_chunked(x, dt, A, Bm, Cm, chunk: int, return_state: bool = False):
     return y.astype(x.dtype)
 
 
-def mamba_fwd(p, u, cfg: ModelConfig):
-    """u: [B, S, D] -> [B, S, D]."""
+# ----------------------------------------------------------------------------
+# Pallas-backed SSD with an XLA-recompute backward.  The intra-chunk kernel
+# (repro.kernels.ssd_scan, interpret mode off-TPU) has no backward kernel, so
+# ``ssd_pallas`` pairs the kernel forward with a custom VJP that replays
+# ``ssd_chunked`` under ``jax.vjp`` — gradients are exactly the XLA path's
+# (the forwards match, tests/test_kernels.py), which is what lets the FL
+# backbone adapter train through the kernel (fl/client.py, impl="pallas").
+# ----------------------------------------------------------------------------
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def ssd_pallas(x, dt, A, Bm, Cm, chunk: int):
+    """Same contract as ``ssd_chunked`` (no ``return_state``)."""
+    from ..kernels.ssd_scan.ops import ssd_forward
+    return ssd_forward(x, dt, A, Bm, Cm, chunk)
+
+
+def _ssd_pallas_fwd(x, dt, A, Bm, Cm, chunk):
+    return ssd_pallas(x, dt, A, Bm, Cm, chunk), (x, dt, A, Bm, Cm)
+
+
+def _ssd_pallas_bwd(chunk, res, g):
+    x, dt, A, Bm, Cm = res
+    _, vjp = jax.vjp(
+        lambda *a: ssd_chunked(*a, chunk), x, dt, A, Bm, Cm)
+    return vjp(g)
+
+
+ssd_pallas.defvjp(_ssd_pallas_fwd, _ssd_pallas_bwd)
+
+
+def mamba_fwd(p, u, cfg: ModelConfig, *, impl: str = "xla"):
+    """u: [B, S, D] -> [B, S, D].  ``impl="pallas"`` routes the chunked-SSD
+    contraction through the Pallas kernel (``ssd_pallas`` above)."""
     B, S, D = u.shape
     nh, hp, N = cfg.ssm_n_heads, cfg.ssm_head_dim, cfg.ssm_state
     z = u @ p["wz"]
@@ -140,7 +171,8 @@ def mamba_fwd(p, u, cfg: ModelConfig):
     dt = jax.nn.softplus((u @ p["wdt"]).astype(jnp.float32) + p["dt_bias"])
     A = -jnp.exp(p["A_log"])
     xh = x.reshape(B, S, nh, hp)
-    y = ssd_chunked(xh, dt, A, Bm, Cm, cfg.ssm_chunk)
+    ssd = ssd_pallas if impl == "pallas" else ssd_chunked
+    y = ssd(xh, dt, A, Bm, Cm, cfg.ssm_chunk)
     y = y + xh * p["D"][None, None, :, None].astype(x.dtype)
     y = y.reshape(B, S, cfg.d_inner)
     from .layers import rms_norm

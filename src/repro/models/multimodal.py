@@ -20,8 +20,72 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+import math
+
 from .config import ModelConfig
 from . import transformer as T
+
+
+# ---------------------------------------------------------------------------
+# unimodal *classification* encoders for the FL harness (fl/client.py)
+# ---------------------------------------------------------------------------
+def init_encoder(key, d_in: int, n_classes: int, cfg: ModelConfig):
+    """A small sequence encoder: linear proj -> ``cfg`` block stack -> head.
+
+    Maps one modality's feature stack [B, T, *feat] to C-class decision
+    logits, playing the same role as the paper's LSTM/CNN submodels but with
+    the LM-scale transformer / mamba2 blocks (``ENCODER_PRESETS`` in
+    config.py).  Params carry ``"blocks"`` / ``"final_norm"`` exactly as
+    ``transformer.init_params`` does, so ``T.backbone`` runs the stack
+    unchanged (incl. remat and the Pallas ``impl`` routing).
+    """
+    pattern = cfg.block_pattern()
+    ks = jax.random.split(key, 3)
+    dt = cfg.param_dtype
+
+    def one_block(bk):
+        bks = jax.random.split(bk, len(pattern))
+        return {f"l{i}": T.init_layer(bks[i], cfg, spec)
+                for i, spec in enumerate(pattern)}
+
+    blocks = jax.vmap(one_block)(jax.random.split(ks[0], cfg.n_blocks))
+    return {
+        "proj": {"w": (jax.random.normal(ks[1], (d_in, cfg.d_model),
+                                         jnp.float32)
+                       / math.sqrt(d_in)).astype(dt),
+                 "b": jnp.zeros((cfg.d_model,), dt)},
+        "blocks": blocks,
+        "final_norm": jnp.zeros((cfg.d_model,), dt),
+        "head": {"w": (jax.random.normal(ks[2], (cfg.d_model, n_classes),
+                                         jnp.float32)
+                       / math.sqrt(cfg.d_model)).astype(dt),
+                 "b": jnp.zeros((n_classes,), dt)},
+    }
+
+
+def encoder_apply(p, x, cfg: ModelConfig, *, dropout_rng=None,
+                  dropout: float = 0.1, remat: bool = False,
+                  impl: str = "xla"):
+    """x: [B, T, *feat] -> logits [B, C].
+
+    Trailing feature dims are flattened per time step (an image stack
+    [B, 32, 32, 3] becomes a 32-step sequence of 96-dim rows).  Dropout is
+    applied to the pooled last-position representation with *per-sample*
+    keys — sample i's mask depends only on (rng, i), never the batch size,
+    preserving the batched-vs-sequential equivalence invariant the cohort
+    vmap relies on (fl/runtime.py; same discipline as ``lstm_apply``).
+    """
+    B, S = x.shape[0], x.shape[1]
+    h = x.reshape(B, S, -1) @ p["proj"]["w"] + p["proj"]["b"]
+    h, _ = T.backbone(p, h, cfg, attn_chunk=S, remat=remat, impl=impl)
+    h = h[:, -1, :]                                          # [B, D]
+    if dropout_rng is not None:
+        keys = jax.vmap(lambda i: jax.random.fold_in(dropout_rng, i))(
+            jnp.arange(B))
+        keep = jax.vmap(lambda k: jax.random.bernoulli(
+            k, 1.0 - dropout, h.shape[1:]))(keys)
+        h = jnp.where(keep, h / (1.0 - dropout), 0.0)
+    return h @ p["head"]["w"] + p["head"]["b"]
 
 
 def init_vlm_params(key, cfg: ModelConfig):

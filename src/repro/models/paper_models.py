@@ -246,15 +246,27 @@ def init_iemocap_model(key):
 
 MODAL_APPLY = {"audio": lstm_apply, "text": lstm_apply, "image": cnn_apply}
 
+#: stable per-modality dropout-stream constants: index in sorted *global*
+#: modality order, NOT order within the call's ``inputs`` — a client
+#: training a modality subset folds the same constant as the full-stack
+#: batched path, and the constant is identical across processes.  (Earlier
+#: revisions folded in Python's ``hash(m)``, which PYTHONHASHSEED
+#: randomises per process, so dropout masks differed across runs; any
+#: seed-sensitive trajectory from before that fix is not comparable
+#: bit-for-bit.)
+MODALITY_INDEX = {m: i for i, m in enumerate(sorted(MODAL_APPLY))}
 
-def modal_logits(params, inputs: dict, *, dropout_rng=None):
+
+def modal_logits(params, inputs: dict, *, dropout_rng=None,
+                 dropout: float = 0.1):
     """Per-modality logits for whichever modalities are present in `inputs`."""
     out = {}
-    for m, x in inputs.items():
+    for m in sorted(inputs):
         rng = None
         if dropout_rng is not None:
-            rng = jax.random.fold_in(dropout_rng, hash(m) % (2 ** 31))
-        out[m] = MODAL_APPLY[m](params[m], x, dropout_rng=rng)
+            rng = jax.random.fold_in(dropout_rng, MODALITY_INDEX[m])
+        out[m] = MODAL_APPLY[m](params[m], inputs[m], dropout_rng=rng,
+                                dropout=dropout)
     return out
 
 

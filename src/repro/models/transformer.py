@@ -41,14 +41,14 @@ def init_layer(key, cfg: ModelConfig, spec: LayerSpec):
 
 
 def apply_layer(p, x, cfg: ModelConfig, spec: LayerSpec, *, n_groups: int = 1,
-                attn_chunk: int = 1024):
+                attn_chunk: int = 1024, impl: str = "xla"):
     aux = jnp.zeros((), jnp.float32)
     h = L.rms_norm(x, p["norm1"], cfg.norm_eps)
     if spec.kind == "attn":
         h = L.attention_fwd(p["mixer"], h, cfg, window=spec.window,
-                            chunk=attn_chunk)
+                            chunk=attn_chunk, impl=impl)
     else:
-        h = mamba_fwd(p["mixer"], h, cfg)
+        h = mamba_fwd(p["mixer"], h, cfg, impl=impl)
     x = x + h
     if "ffn" in p:
         h = L.rms_norm(x, p["norm2"], cfg.norm_eps)
@@ -139,13 +139,16 @@ def init_params(key, cfg: ModelConfig):
 
 
 def backbone(params, x, cfg: ModelConfig, *, n_groups: int = 1,
-             attn_chunk: int = 1024, residual_spec=None, remat: bool = False):
+             attn_chunk: int = 1024, residual_spec=None, remat: bool = False,
+             impl: str = "xla"):
     """x: [B, S, D] embeddings -> (hidden [B,S,D], moe_aux scalar).
 
     ``residual_spec``: optional PartitionSpec constraint re-applied to the
     residual stream after every super-block (e.g. sequence-over-model
     sharding — Megatron-style sequence parallelism; used by the §Perf
     hillclimbs).  ``remat``: activation-checkpoint each super-block.
+    ``impl="pallas"``: route attention/SSD mixers through the Pallas kernels
+    (differentiable — custom VJPs recompute the backward via the XLA path).
     """
     pattern = cfg.block_pattern()
 
@@ -153,7 +156,7 @@ def backbone(params, x, cfg: ModelConfig, *, n_groups: int = 1,
         aux = jnp.zeros((), jnp.float32)
         for i, spec in enumerate(pattern):
             h, a = apply_layer(bp[f"l{i}"], h, cfg, spec, n_groups=n_groups,
-                               attn_chunk=attn_chunk)
+                               attn_chunk=attn_chunk, impl=impl)
             aux = aux + a
         if residual_spec is not None:
             h = jax.lax.with_sharding_constraint(h, residual_spec)

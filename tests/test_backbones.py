@@ -1,0 +1,245 @@
+"""Contract tests for the model-adapter layer (fl/client.py) and the
+transformer/SSD backbone adapters on the FL hot path.
+
+Covers the adapter protocol end to end: backbone-parametrized fused-vs-host
+equivalence (the tests/test_fused_round.py harness at tiny dims),
+remat-on vs remat-off parity, Eq. 12 aggregation over backbone param
+pytrees, the kernel-backed (Pallas) forward/backward parity, and the
+dropout-stream bugfixes — the rate actually reaching the submodels, the
+hash/eq value contract, and the PYTHONHASHSEED-independence of per-modality
+dropout keys (regression: ``modal_logits`` used to fold in Python's
+process-randomized ``hash(m)``, so two processes drew different masks).
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aggregation as agg
+from repro.core import fusion
+from repro.fl.client import (BackboneAdapter, ModelAdapter, PaperModelAdapter,
+                             make_adapter)
+from repro.fl.runtime import MFLExperiment, parse_engine
+from repro.models import paper_models as pm
+
+from test_fused_round import CFG, _assert_equivalent
+
+ENCODER_ARCHS = ("transformer", "ssd")
+
+
+def _iemocap_batch(seed=0, B=4):
+    rng = np.random.default_rng(seed)
+    feats = {"audio": jnp.asarray(rng.standard_normal((B, 32, 11)),
+                                  jnp.float32),
+             "text": jnp.asarray(rng.standard_normal((B, 24, 100)),
+                                 jnp.float32)}
+    labels = jnp.asarray(rng.integers(0, 10, B))
+    return feats, labels
+
+
+# ---------------------------------------------------------------------------
+# tentpole: backbone adapters drive the fused engine, equivalent to host
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("arch", ENCODER_ARCHS)
+def test_fused_matches_batched_host_backbone(arch):
+    host = MFLExperiment(dataset="iemocap", engine="batched", arch=arch,
+                         **CFG)
+    fus = MFLExperiment(dataset="iemocap", engine="fused", arch=arch, **CFG)
+    host.run(4)
+    fus.run(4)
+    _assert_equivalent(host, fus)
+
+
+@pytest.mark.parametrize("arch", ("lstm-cnn", "transformer"))
+def test_remat_parity(arch):
+    """engine="fused:remat" checkpoint-wraps each client's loss — same math,
+    recomputed backward: trajectories must match the plain engine."""
+    a = MFLExperiment(dataset="iemocap", engine="fused", arch=arch, **CFG)
+    b = MFLExperiment(dataset="iemocap", engine="fused:remat", arch=arch,
+                      **CFG)
+    a.run_scanned(4)
+    b.run_scanned(4)
+    for x, y in zip(jax.tree.leaves(a._carry.params),
+                    jax.tree.leaves(b._carry.params)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-6)
+
+
+def test_kernel_path_parity():
+    """use_kernels=True routes the mixers through the flash_attention /
+    ssd_scan Pallas kernels; forward and (custom-VJP recomputed) gradients
+    must match the XLA reference to fp32 tolerance."""
+    feats, labels = _iemocap_batch()
+    for arch in ENCODER_ARCHS:
+        ax = make_adapter("iemocap", arch, use_kernels=False)
+        ak = make_adapter("iemocap", arch, use_kernels=True)
+        gp = ax.init_global(jax.random.key(0))
+
+        def run(a):
+            def f(p):
+                lg = a.modal_logits(p, feats, dropout_rng=jax.random.key(3))
+                total, _ = fusion.multimodal_loss(lg, labels, a.v_weights)
+                return total
+            return jax.value_and_grad(f)(gp)
+
+        (lx, gx), (lk, gk) = run(ax), run(ak)
+        assert float(lx) == pytest.approx(float(lk), abs=1e-5)
+        for x, y in zip(jax.tree.leaves(gx), jax.tree.leaves(gk)):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                       atol=5e-6)
+
+
+@pytest.mark.parametrize("arch", ENCODER_ARCHS)
+def test_eq12_aggregation_over_backbone_pytrees(arch):
+    """core.aggregation is architecture-agnostic: the stacked Eq. 12
+    contraction over encoder param pytrees equals the manual per-leaf
+    weighted sum, zero-weight rows dropping out exactly."""
+    a = make_adapter("iemocap", arch)
+    gp = a.init_global(jax.random.key(0))
+    K = 3
+    keys = jax.random.split(jax.random.key(1), K)
+    stacked = jax.tree.map(
+        lambda *xs: jnp.stack(xs), *[a.init_global(k) for k in keys])
+    w = {"audio": np.array([0.5, 0.5, 0.0]),
+         "text": np.array([0.0, 0.25, 0.75])}
+    out = agg.aggregate_stacked(gp, stacked, w)
+    for m in gp:
+        ref = jax.tree.map(
+            lambda x: sum(w[m][k] * x[k] for k in range(K)), stacked[m])
+        for x, y in zip(jax.tree.leaves(out[m]), jax.tree.leaves(ref)):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                       rtol=1e-5, atol=1e-6)
+    # zero-sum weights leave the global submodel untouched
+    out0 = agg.aggregate_stacked(gp, stacked,
+                                 {"audio": np.zeros(K), "text": w["text"]})
+    for x, y in zip(jax.tree.leaves(out0["audio"]),
+                    jax.tree.leaves(gp["audio"])):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# satellite: dropout rate plumbing (PaperModelAdapter(dropout=) was dead)
+# ---------------------------------------------------------------------------
+def test_dropout_zero_equals_no_rng():
+    feats, _ = _iemocap_batch()
+    for adapter in (PaperModelAdapter("iemocap", dropout=0.0),
+                    make_adapter("iemocap", "transformer", dropout=0.0)):
+        gp = adapter.init_global(jax.random.key(0))
+        with_rng = adapter.modal_logits(gp, feats,
+                                        dropout_rng=jax.random.key(7))
+        without = adapter.modal_logits(gp, feats, dropout_rng=None)
+        for m in feats:
+            np.testing.assert_allclose(np.asarray(with_rng[m]),
+                                       np.asarray(without[m]), atol=1e-6)
+
+
+def test_dropout_rate_changes_trajectories():
+    """Regression: PaperModelAdapter(dropout=0.5) used to silently train at
+    the hardcoded 0.1.  A non-default rate must change the local update."""
+    feats, labels = _iemocap_batch()
+    mods = tuple(sorted(feats))
+    rng = jax.random.key(5)
+
+    def one_step(rate):
+        a = PaperModelAdapter("iemocap", dropout=rate)
+        gp = a.init_global(jax.random.key(0))
+        new, _, _, _ = a._update_fn(mods)(gp, feats, labels, rng)
+        return new
+
+    p1, p5 = one_step(0.1), one_step(0.5)
+    diffs = [float(np.max(np.abs(np.asarray(x) - np.asarray(y))))
+             for x, y in zip(jax.tree.leaves(p1), jax.tree.leaves(p5))]
+    assert max(diffs) > 1e-6
+
+
+# ---------------------------------------------------------------------------
+# satellite: hash/eq value contract
+# ---------------------------------------------------------------------------
+def test_adapter_hash_eq_contract():
+    a = PaperModelAdapter("iemocap", eta=0.07, dropout=0.2)
+    b = PaperModelAdapter("iemocap", eta=0.07, dropout=0.2)
+    assert a == b and hash(a) == hash(b)
+    assert a != PaperModelAdapter("iemocap", eta=0.07, dropout=0.3)
+    assert a != PaperModelAdapter("crema_d", eta=0.07, dropout=0.2)
+    # different classes never compare equal, whatever the shared fields
+    assert PaperModelAdapter("iemocap") != make_adapter("iemocap",
+                                                        "transformer")
+    t1 = make_adapter("iemocap", "transformer")
+    t2 = make_adapter("iemocap", "transformer")
+    assert t1 == t2 and hash(t1) == hash(t2)
+    assert t1 != make_adapter("iemocap", "ssd")
+    assert t1 != make_adapter("iemocap", "transformer", use_kernels=True)
+    assert t1 != make_adapter("iemocap", "transformer", remat=True)
+    # equal-valued adapters share the lru_cache-d compiled steps
+    assert a.cohort_step(("audio", "text")) is \
+        b.cohort_step(("audio", "text"))
+
+
+def test_make_adapter_routing():
+    assert isinstance(make_adapter("iemocap"), PaperModelAdapter)
+    assert isinstance(make_adapter("iemocap", "ssd"), BackboneAdapter)
+    assert isinstance(make_adapter("crema_d", "transformer"), ModelAdapter)
+    with pytest.raises(ValueError):
+        make_adapter("iemocap", "resnet")
+
+
+def test_parse_engine_tokens():
+    assert parse_engine("fused")[0] == "fused"
+    assert parse_engine("batched:np")[1] == "np"
+    loop, solver, loss, remat, kern, canon = parse_engine("fused:pallas+remat")
+    assert (loop, solver, loss, remat, kern) == \
+        ("fused", "jax", "pallas", True, True)
+    assert canon == "fused:pallas+remat"
+    with pytest.raises(ValueError):
+        parse_engine("fused:np+seq")
+    with pytest.raises(ValueError):
+        parse_engine("fused:warp")
+
+
+# ---------------------------------------------------------------------------
+# satellite: dropout keys independent of PYTHONHASHSEED (regression)
+# ---------------------------------------------------------------------------
+_HASHSEED_SCRIPT = r"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.models import paper_models as pm
+rng = np.random.default_rng(0)
+params = pm.init_iemocap_model(jax.random.key(0))
+feats = {"audio": jnp.asarray(rng.standard_normal((4, 32, 11)), jnp.float32),
+         "text": jnp.asarray(rng.standard_normal((4, 24, 100)), jnp.float32)}
+out = pm.modal_logits(params, feats, dropout_rng=jax.random.key(11))
+print(repr([np.asarray(out[m]).sum().item() for m in sorted(out)]))
+"""
+
+
+def test_modal_logits_independent_of_hashseed():
+    """Dropout masks must be bit-identical across processes with different
+    PYTHONHASHSEED values (the old ``hash(m)`` fold-in was randomized)."""
+    def run(seed):
+        env = dict(os.environ, PYTHONHASHSEED=seed,
+                   PYTHONPATH="src" + os.pathsep + os.environ.get(
+                       "PYTHONPATH", ""))
+        r = subprocess.run([sys.executable, "-c", _HASHSEED_SCRIPT],
+                           capture_output=True, text=True, env=env,
+                           cwd=os.path.dirname(os.path.dirname(
+                               os.path.abspath(__file__))))
+        assert r.returncode == 0, r.stderr
+        return r.stdout.strip()
+
+    assert run("0") == run("12345")
+
+
+def test_modal_logits_subset_uses_global_modality_constant():
+    """A modality-subset call (host seq path with modality dropout) must
+    draw the same per-modality masks as the full-stack call — the fold-in
+    constant is the *global* sorted-modality index, not the subset index."""
+    feats, _ = _iemocap_batch()
+    params = pm.init_iemocap_model(jax.random.key(0))
+    rng = jax.random.key(9)
+    full = pm.modal_logits(params, feats, dropout_rng=rng)
+    only_text = pm.modal_logits({"text": params["text"]},
+                                {"text": feats["text"]}, dropout_rng=rng)
+    np.testing.assert_array_equal(np.asarray(full["text"]),
+                                  np.asarray(only_text["text"]))
